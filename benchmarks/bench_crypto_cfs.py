@@ -1,0 +1,45 @@
+"""Zero-trust crypto (paper §3.4.6) and CFS (paper §3.4.5) benchmarks."""
+
+from __future__ import annotations
+
+from repro.core import Colonies, Crypto, InProcTransport
+from repro.core.cluster import standalone_server
+from repro.core.fs import CFSClient, MemoryStorage, checksum
+
+from .common import Row, timeit
+
+
+def run() -> None:
+    prv = Crypto.prvkey()
+    msg = b"x" * 256
+    sig = Crypto.sign(msg, prv)
+    Row.add("crypto_sign_256B", timeit(lambda: Crypto.sign(msg, prv), 20),
+            "ECDSA secp256k1 + RFC6979")
+    Row.add("crypto_recover_256B", timeit(lambda: Crypto.recover(msg, sig), 20),
+            "pubkey recovery + SHA3 id")
+
+    server_prv, colony_prv = Crypto.prvkey(), Crypto.prvkey()
+    srv = standalone_server(Crypto.id(server_prv), verify_signatures=False)
+    client = Colonies(InProcTransport([srv]), insecure=True)
+    client.add_colony("bench", Crypto.id(colony_prv), server_prv)
+    cfs = CFSClient(client, MemoryStorage(), colony_prv)
+
+    blob = b"\xab" * (1 << 20)  # 1 MiB
+    i = [0]
+
+    def up():
+        i[0] += 1
+        cfs.upload_bytes("bench", "/bench", f"f{i[0]}.bin", blob)
+
+    us = timeit(up, 20)
+    Row.add("cfs_upload_1MiB", us, f"{1.0 / (us / 1e6):.0f} MiB/s metadata+store")
+    us = timeit(lambda: cfs.download_bytes("bench", "/bench", "f5.bin"), 20)
+    Row.add("cfs_download_1MiB", us, "checksum-verified")
+
+    for _ in range(80):
+        up()
+    us = timeit(
+        lambda: client.create_snapshot("bench", "/bench", "s", colony_prv), 10
+    )
+    Row.add("cfs_snapshot_100files", us, "revision pinning")
+    srv.stop()

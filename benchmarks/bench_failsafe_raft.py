@@ -1,0 +1,84 @@
+"""Failsafe (paper §3.4) and Raft HA (paper §3.4.1, Fig. 3) benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import Colonies, Crypto, ExecutorBase, FunctionSpec, InProcTransport
+from repro.core.cluster import standalone_server
+from repro.core.raft import SimRaftCluster
+
+from .common import Row, timeit
+
+
+def run() -> None:
+    # --- failsafe scan cost vs table size -------------------------------
+    server_prv, colony_prv = Crypto.prvkey(), Crypto.prvkey()
+    srv = standalone_server(Crypto.id(server_prv), verify_signatures=False)
+    client = Colonies(InProcTransport([srv]), insecure=True)
+    client.add_colony("bench", Crypto.id(colony_prv), server_prv)
+    for i in range(2000):
+        client.submit(
+            FunctionSpec.from_dict({
+                "conditions": {"colonyname": "bench", "executortype": "worker"},
+                "funcname": "echo", "maxexectime": 3600,
+            }),
+            colony_prv,
+        )
+    us = timeit(srv.failsafe_scan, 20)
+    Row.add("failsafe_scan_2000_procs", us, "stateless deadline sweep")
+
+    # --- recovery latency: crash -> re-queued ----------------------------
+    ex = ExecutorBase(client, "bench", "w", "worker", colony_prvkey=colony_prv)
+    p = client.submit(
+        FunctionSpec.from_dict({
+            "conditions": {"colonyname": "bench", "executortype": "worker"},
+            "funcname": "echo", "maxexectime": 1, "maxretries": 5,
+        }),
+        colony_prv,
+    )
+    client.assign("bench", 2.0, ex.prvkey)  # take the lease and vanish
+    t0 = time.perf_counter()
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        srv.failsafe_scan()
+        if client.get_process(p["processid"], colony_prv)["state"] == "waiting":
+            break
+        time.sleep(0.02)
+    us = (time.perf_counter() - t0) * 1e6
+    Row.add("failsafe_recovery_lease_1s", us, "crash -> re-queued")
+    srv.stop()
+
+    # --- raft: election + failover + replication throughput --------------
+    elect_ms = []
+    for seed in range(5):
+        sim = SimRaftCluster(3, seed=seed)
+        t0 = sim.now_ms
+        assert sim.run_until_leader() is not None
+        elect_ms.append(sim.now_ms - t0)
+    Row.add("raft_election_3node", sum(elect_ms) / len(elect_ms) * 1e3,
+            f"{min(elect_ms)}-{max(elect_ms)} ms simclock")
+
+    fail_ms = []
+    for seed in range(5):
+        sim = SimRaftCluster(3, seed=seed + 50)
+        l1 = sim.run_until_leader()
+        sim.kill(l1)
+        t0 = sim.now_ms
+        while not [l for l in sim.leaders() if l != l1]:
+            sim.step()
+        fail_ms.append(sim.now_ms - t0)
+    Row.add("raft_failover_3node", sum(fail_ms) / len(fail_ms) * 1e3,
+            f"{min(fail_ms)}-{max(fail_ms)} ms simclock")
+
+    sim = SimRaftCluster(3, seed=7)
+    leader = sim.run_until_leader()
+    n = 200
+    t0 = time.perf_counter()
+    for v in range(n):
+        sim.nodes[leader].propose({"v": v})
+        sim.step()
+    while sim.nodes[leader].last_applied < n - 1:
+        sim.step()
+    us = (time.perf_counter() - t0) / n * 1e6
+    Row.add("raft_replicated_propose", us, f"{1e6 / us:.0f} entries/s (wallclock)")

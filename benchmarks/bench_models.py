@@ -1,0 +1,53 @@
+"""Compute-plane benchmarks: smoke-config train/decode step timings on CPU
+(per assigned architecture) — the executor-side cost the broker dispatches."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, TrainConfig, get_config
+from repro.data.pipeline import SyntheticTokens
+from repro.models import decode_step, init_params, model_spec, prefill
+from repro.train.train_step import init_state, make_train_step
+
+from .common import Row
+
+
+def run() -> None:
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, "smoke").copy(
+            param_dtype="float32", compute_dtype="float32"
+        )
+        params = init_params(jax.random.key(0), model_spec(cfg), jnp.float32)
+        tcfg = TrainConfig()
+        state = init_state(params, tcfg)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        batch = {
+            k: jnp.asarray(v)
+            for k, v in SyntheticTokens(cfg, 2, 32, seed=0).batch_at(0).items()
+        }
+        state, _ = step(state, batch)  # compile
+        n = 5
+        t0 = time.perf_counter()
+        for _ in range(n):
+            state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        Row.add(f"train_step_smoke_{arch}", (time.perf_counter() - t0) / n * 1e6,
+                "B=2 S=32 cpu")
+
+        pre = dict(batch)
+        pre["tokens"] = batch["tokens"][:, :16]
+        _, cache = jax.jit(lambda p, b: prefill(p, cfg, b, max_len=64))(params, pre)
+        dec = jax.jit(lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
+        tok = batch["tokens"][:, :1]
+        logits, cache = dec(params, tok, cache, jnp.int32(16))  # compile
+        t0 = time.perf_counter()
+        for i in range(n):
+            logits, cache = dec(params, tok, cache, jnp.int32(17 + i))
+        jax.block_until_ready(logits)
+        Row.add(f"serve_step_smoke_{arch}", (time.perf_counter() - t0) / n * 1e6,
+                "B=2 one token cpu")

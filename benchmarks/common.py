@@ -1,0 +1,28 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, n: int, warmup: int = 1) -> float:
+    """Mean microseconds per call."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+class Row:
+    rows: list[tuple[str, float, str]] = []
+
+    @classmethod
+    def add(cls, name: str, us_per_call: float, derived: str = "") -> None:
+        cls.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    @classmethod
+    def dump(cls) -> list[tuple[str, float, str]]:
+        return list(cls.rows)

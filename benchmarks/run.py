@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus a trailing roofline
+summary distilled from the dry-run artifacts, if present).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run broker     # one suite
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+SUITES = ("broker", "workflow", "failsafe_raft", "crypto_cfs", "models")
+
+
+def _roofline_summary() -> None:
+    """Append per-cell roofline rows from results/dryrun (if generated)."""
+    outdir = "results/dryrun"
+    if not os.path.isdir(outdir):
+        return
+    from benchmarks.common import Row
+
+    for fname in sorted(os.listdir(outdir)):
+        if not fname.endswith(".json") or fname == "summary.json":
+            continue
+        with open(os.path.join(outdir, fname)) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        dominant = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        Row.add(
+            f"roofline_{fname[:-5]}",
+            dominant * 1e6,  # dominant-term step time, us
+            f"{r['bottleneck']}-bound frac={r['roofline_fraction']:.4f}",
+        )
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for suite in wanted:
+        if suite not in SUITES:
+            raise SystemExit(f"unknown suite {suite!r}; known: {SUITES}")
+        module = __import__(f"benchmarks.bench_{suite}", fromlist=["run"])
+        module.run()
+    if not sys.argv[1:]:
+        _roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""ColonyOS reproduction: meta-OS orchestration + JAX compute continuum."""

@@ -1,0 +1,56 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+
+from __future__ import annotations
+
+from . import (
+    deepseek_v3_671b,
+    granite_3_8b,
+    jamba_1_5_large_398b,
+    llama_3_2_vision_11b,
+    mixtral_8x7b,
+    qwen2_5_14b,
+    rwkv6_7b,
+    seamless_m4t_large_v2,
+    stablelm_3b,
+    starcoder2_15b,
+)
+from .base import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+
+_MODULES = [
+    starcoder2_15b,
+    qwen2_5_14b,
+    stablelm_3b,
+    granite_3_8b,
+    jamba_1_5_large_398b,
+    rwkv6_7b,
+    llama_3_2_vision_11b,
+    mixtral_8x7b,
+    deepseek_v3_671b,
+    seamless_m4t_large_v2,
+]
+
+ARCHS: dict[str, object] = {m.ARCH_ID: m for m in _MODULES}
+ARCH_IDS: list[str] = list(ARCHS.keys())
+
+
+def get_config(arch: str, variant: str = "full") -> ModelConfig:
+    """variant: 'full' (assignment config) or 'smoke' (reduced, CPU-runnable)."""
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = ARCHS[arch]
+    if variant == "full":
+        return mod.full()
+    if variant == "smoke":
+        return mod.smoke()
+    raise KeyError(f"unknown variant {variant!r} (full|smoke)")
+
+
+__all__ = [
+    "ARCHS",
+    "ARCH_IDS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "get_config",
+]

@@ -1,0 +1,64 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16e top-2 — Mamba+attn 1:7 interleave, MoE
+[arXiv:2403.19887; hf].
+
+Layout: period-8 groups (attention at index 4, Mamba elsewhere), MoE
+replaces the MLP on every other layer — 9 scanned groups of 8 layers.
+Jamba uses no explicit positional encoding (the Mamba layers carry it).
+"""
+
+from .base import MambaConfig, ModelConfig, MoEConfig
+
+ARCH_ID = "jamba-1.5-large-398b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="hybrid",
+        source="arXiv:2403.19887; hf",
+        num_layers=72,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=24576,
+        vocab_size=65536,
+        attention="gqa",
+        use_rope=False,
+        activation="swiglu",
+        norm="rmsnorm",
+        hybrid_period=8,
+        hybrid_attn_index=4,
+        mamba=MambaConfig(state_dim=16, conv_width=4, expand=2),
+        moe=MoEConfig(
+            num_experts=16,
+            top_k=2,
+            expert_d_ff=24576,
+            moe_every=2,
+            capacity_factor=1.25,
+            group_size=2048,
+        ),
+        sharding_rules="fsdp",
+        # 16 experts == 16-wide model axis: clean expert parallelism; the
+        # 24576-wide expert hidden additionally shards over "data" so MoE
+        # weights are 3.1 GB/chip with no FSDP re-gather per microbatch.
+        rules_overrides={"expert_ffn": "data"},
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().copy(
+        num_layers=8,  # one period group
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=0,
+        d_ff=192,
+        vocab_size=256,
+        mamba=MambaConfig(state_dim=4, conv_width=4, expand=2),
+        moe=MoEConfig(
+            num_experts=4, top_k=2, expert_d_ff=192, moe_every=2,
+            capacity_factor=2.0, group_size=64,
+        ),
+        sharding_rules="tp",
+    )

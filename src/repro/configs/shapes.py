@@ -1,0 +1,86 @@
+"""Assigned input-shape suites and abstract input specs (dry-run plane).
+
+Four cells per architecture (40 total):
+  train_4k    : seq 4,096  x global_batch 256  -> train_step
+  prefill_32k : seq 32,768 x global_batch 32   -> prefill (serve)
+  decode_32k  : 1 new token, KV/state ctx 32,768, batch 128 -> serve_step
+  long_500k   : 1 new token, ctx 524,288, batch 1 -> serve_step
+                (sub-quadratic archs only: ssm / hybrid / SWA)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — shardable,
+zero allocation — matching exactly the pytrees the jitted step functions
+take.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import abstract_cache
+from .base import SHAPES, ModelConfig, ShapeConfig
+
+
+class CellSkip(Exception):
+    """This (arch x shape) cell is skipped by design; .reason says why."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return (
+            "long_500k requires sub-quadratic decode; "
+            f"{cfg.name} is pure full-attention (see DESIGN.md §Arch-applicability)"
+        )
+    return None
+
+
+def _mem_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Cross-attention memory length for vlm/audio archs."""
+    if cfg.cross_attn_every > 0:
+        return cfg.num_patches
+    if cfg.is_encdec:
+        return min(cfg.max_src_len, shape.seq_len)
+    return 0
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Full-sequence inputs (train / prefill)."""
+    b, s = shape.global_batch, shape.seq_len
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    specs: dict = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.cross_attn_every > 0:
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.vision_embed_dim), cdtype
+        )
+    if cfg.is_encdec:
+        specs["src_frames"] = jax.ShapeDtypeStruct(
+            (b, _mem_len(cfg, shape), cfg.audio_embed_dim), cdtype
+        )
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """serve_step inputs: one new token + cache at context length."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = abstract_cache(cfg, b, s, mem_len=_mem_len(cfg, shape))
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str) -> dict:
+    """Abstract inputs for the given cell; raises CellSkip when inapplicable."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    reason = cell_skip_reason(cfg, shape)
+    if reason:
+        raise CellSkip(reason)
+    if shape.kind in ("train", "prefill"):
+        return batch_specs(cfg, shape)
+    return decode_specs(cfg, shape)

@@ -1,0 +1,34 @@
+"""ColonyOS core — the paper's meta-operating system, in Python.
+
+Public surface:
+  Crypto, Colonies (SDK), ColoniesServer, ExecutorBase, FunctionSpec,
+  WorkflowSpec, databases, CFS, cron, generators, Raft cluster.
+"""
+
+from .client import Colonies, InProcTransport
+from .crypto import Crypto
+from .database import Database, MemoryDatabase, SqliteDatabase
+from .executor import ExecutorBase, ProcessContext
+from .process import FAILED, RUNNING, SUCCESSFUL, WAITING, Process
+from .server import ColoniesServer
+from .spec import Conditions, FunctionSpec, WorkflowSpec
+
+__all__ = [
+    "Colonies",
+    "InProcTransport",
+    "Crypto",
+    "Database",
+    "MemoryDatabase",
+    "SqliteDatabase",
+    "ExecutorBase",
+    "ProcessContext",
+    "Process",
+    "WAITING",
+    "RUNNING",
+    "SUCCESSFUL",
+    "FAILED",
+    "ColoniesServer",
+    "Conditions",
+    "FunctionSpec",
+    "WorkflowSpec",
+]

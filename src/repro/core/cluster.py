@@ -1,0 +1,122 @@
+"""High-availability deployment (paper §3.4.1, Fig. 3).
+
+N Colonies server replicas share one database (the paper's shared
+Postgres); a Raft cluster elects the leader. Only the leader serves
+``assign`` — followers answer 421 and the SDK transport retries against
+the next replica. Assign operations are serialized through the Raft log
+before being applied, guaranteeing exactly one executor per process even
+across leader failovers; the apply is idempotent so replay is safe.
+
+Cron/generator scanning and the failsafe run on the leader only.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from .cron import CronExtension
+from .database import Database, MemoryDatabase
+from .errors import ConflictError
+from .fs import CFSExtension
+from .generator import GeneratorExtension
+from .raft import ThreadedRaftCluster
+from .server import ColoniesServer
+
+
+class HAColonyCluster:
+    """A replicated Colonies service: ``cluster.servers`` are the replicas."""
+
+    def __init__(
+        self,
+        serverid: str,
+        replicas: int = 3,
+        db: Database | None = None,
+        verify_signatures: bool = True,
+        seed: int = 0,
+    ) -> None:
+        self.db = db if db is not None else MemoryDatabase()
+        self.servers: list[ColoniesServer] = []
+        self._applied_lock = threading.Lock()
+        self._applied_ops: set[str] = set()
+
+        self.raft = ThreadedRaftCluster(replicas, self._apply, seed=seed)
+
+        for i in range(replicas):
+            srv = ColoniesServer(
+                serverid,
+                self.db,
+                verify_signatures=verify_signatures,
+                name=f"colonies-{i}",
+            )
+            CronExtension(srv)
+            GeneratorExtension(srv)
+            CFSExtension(srv)
+            nid = f"n{i}"
+            node = self.raft.nodes[nid]
+            srv.set_leader_check(node.is_leader)
+            srv.set_assign_proposer(
+                (lambda nid_: lambda op: self.raft.propose_and_wait(nid_, op))(nid)
+            )
+            self.servers.append(srv)
+
+    # Replicated state machine apply — idempotent against the shared DB.
+    def _apply(self, node_id: str, entry: dict, index: int) -> None:
+        if entry.get("op") != "assign":
+            return
+        key = f"{entry['processid']}:{entry['executorid']}:{entry['ts']}"
+        with self._applied_lock:
+            if key in self._applied_ops:
+                return
+            self._applied_ops.add(key)
+        try:
+            self.servers[0].apply_assign(entry)
+        except ConflictError:
+            # Same op replayed after a failover — already applied.
+            pass
+
+    def start(self, failsafe_interval: float = 0.25) -> None:
+        self.raft.start()
+        for srv in self.servers:
+            srv.start_background(failsafe_interval)
+
+    def stop(self) -> None:
+        for srv in self.servers:
+            srv.stop()
+        self.raft.stop()
+
+    def leader_server(self) -> ColoniesServer | None:
+        lid = self.raft.leader_id()
+        if lid is None:
+            return None
+        return self.servers[int(lid[1:])]
+
+    def kill_server(self, index: int) -> None:
+        """Chaos: partition a replica away (its raft node stops hearing)."""
+        self.raft.kill(f"n{index}")
+
+    def revive_server(self, index: int) -> None:
+        self.raft.revive(f"n{index}")
+
+    def wait_for_leader(self, timeout: float = 10.0) -> str | None:
+        import time
+
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            lid = self.raft.leader_id()
+            if lid is not None:
+                return lid
+            time.sleep(0.02)
+        return None
+
+
+def standalone_server(
+    serverid: str,
+    db: Database | None = None,
+    verify_signatures: bool = True,
+) -> ColoniesServer:
+    """Single-replica deployment with all extensions wired."""
+    srv = ColoniesServer(serverid, db, verify_signatures=verify_signatures)
+    CronExtension(srv)
+    GeneratorExtension(srv)
+    CFSExtension(srv)
+    return srv

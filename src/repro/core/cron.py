@@ -1,0 +1,187 @@
+"""Cron — stateless time-based workflow triggering (paper §3.4.3).
+
+Two-step leader protocol, exactly as the paper describes:
+  1. the elected leader computes a *future deadline* for each cron entry
+     and stores it in the cron table;
+  2. the leader periodically scans the table; when ``now > deadline`` it
+     submits the workflow and writes the next deadline.
+
+No session state lives in memory between scans, so leader failover simply
+resumes scanning from the table.
+
+Supports plain intervals and 5-field cron expressions
+(minute hour day-of-month month day-of-week; ``*``, ``*/n``, lists, ranges).
+"""
+
+from __future__ import annotations
+
+import secrets
+import time
+from typing import Any, Callable
+
+from .database import Database
+from .errors import NotFoundError, ValidationError
+from .process import now_ns
+from .spec import WorkflowSpec
+
+CRON_TABLE = "crons"
+
+
+# ---------------------------------------------------------------------------
+# Tiny 5-field cron expression parser
+# ---------------------------------------------------------------------------
+
+
+def _parse_field(expr: str, lo: int, hi: int) -> set[int]:
+    out: set[int] = set()
+    for part in expr.split(","):
+        step = 1
+        if "/" in part:
+            part, step_s = part.split("/", 1)
+            step = int(step_s)
+        if part in ("*", ""):
+            rng = range(lo, hi + 1)
+        elif "-" in part:
+            a, b = part.split("-", 1)
+            rng = range(int(a), int(b) + 1)
+        else:
+            rng = range(int(part), int(part) + 1)
+        for v in rng:
+            if lo <= v <= hi and (v - lo) % step == 0:
+                out.add(v)
+    if not out:
+        raise ValidationError(f"empty cron field {expr!r}")
+    return out
+
+
+def next_cron_deadline_ns(cronexpr: str, after_ns: int) -> int:
+    """Next matching minute boundary strictly after ``after_ns``."""
+    fields = cronexpr.split()
+    if len(fields) != 5:
+        raise ValidationError("cron expression must have 5 fields")
+    minutes = _parse_field(fields[0], 0, 59)
+    hours = _parse_field(fields[1], 0, 23)
+    doms = _parse_field(fields[2], 1, 31)
+    months = _parse_field(fields[3], 1, 12)
+    dows = _parse_field(fields[4], 0, 6)  # 0 = Monday (python weekday)
+    t = (after_ns // (60 * 10**9) + 1) * 60  # next minute boundary, seconds
+    for _ in range(366 * 24 * 60):  # bounded search: one year of minutes
+        st = time.localtime(t)
+        if (
+            st.tm_min in minutes
+            and st.tm_hour in hours
+            and st.tm_mday in doms
+            and st.tm_mon in months
+            and st.tm_wday in dows
+        ):
+            return t * 10**9
+        t += 60
+    raise ValidationError(f"cron expression {cronexpr!r} never fires")
+
+
+# ---------------------------------------------------------------------------
+# Server extension
+# ---------------------------------------------------------------------------
+
+
+class CronExtension:
+    """Leader-scanned cron table; registered on a ColoniesServer."""
+
+    def __init__(self, server) -> None:
+        self.server = server
+        self.db: Database = server.db
+        server.extensions.append(self)
+        self.triggered = 0  # observability for tests/benchmarks
+
+    def handlers(self) -> dict[str, Callable[[str, dict], Any]]:
+        return {
+            "addcron": self._h_add_cron,
+            "getcrons": self._h_get_crons,
+            "removecron": self._h_remove_cron,
+            "runcron": self._h_run_cron,
+        }
+
+    def _h_add_cron(self, identity: str, payload: dict) -> dict:
+        c = payload["cron"]
+        colony = c.get("colonyname", "")
+        self.server._require_member(identity, colony)
+        wf = WorkflowSpec.from_dict(c.get("workflow", {}))
+        if not wf.specs:
+            raise ValidationError("cron needs a workflow")
+        for s in wf.specs:
+            s.conditions.colonyname = s.conditions.colonyname or colony
+        wf.colonyname = colony
+        wf.validate()
+        interval = float(c.get("interval", 0))
+        cronexpr = c.get("cronexpr", "")
+        if interval <= 0 and not cronexpr:
+            raise ValidationError("cron needs interval > 0 or a cronexpr")
+        ts = now_ns()
+        entry = {
+            "cronid": secrets.token_hex(16),
+            "colonyname": colony,
+            "name": c.get("name", ""),
+            "interval": interval,
+            "cronexpr": cronexpr,
+            "workflow": wf.to_dict(),
+            # Step 1 of the two-step protocol: the future deadline.
+            "deadline": self._next_deadline(interval, cronexpr, ts),
+            "lastrun": 0,
+            "runs": 0,
+            "lastworkflowid": "",
+        }
+        self.db.kv_put(CRON_TABLE, entry["cronid"], entry)
+        return entry
+
+    @staticmethod
+    def _next_deadline(interval: float, cronexpr: str, after_ns: int) -> int:
+        if cronexpr:
+            return next_cron_deadline_ns(cronexpr, after_ns)
+        return after_ns + int(interval * 1e9)
+
+    def _h_get_crons(self, identity: str, payload: dict) -> list[dict]:
+        colony = payload["colonyname"]
+        self.server._require_member(identity, colony)
+        return [e for e in self.db.kv_list(CRON_TABLE) if e["colonyname"] == colony]
+
+    def _h_remove_cron(self, identity: str, payload: dict) -> dict:
+        cronid = payload["cronid"]
+        entry = self.db.kv_get(CRON_TABLE, cronid)
+        if entry is None:
+            raise NotFoundError("cron not found")
+        self.server._require_member(identity, entry["colonyname"])
+        self.db.kv_del(CRON_TABLE, cronid)
+        return {"cronid": cronid, "removed": True}
+
+    def _h_run_cron(self, identity: str, payload: dict) -> dict:
+        """Force-fire a cron now (CLI convenience)."""
+        cronid = payload["cronid"]
+        entry = self.db.kv_get(CRON_TABLE, cronid)
+        if entry is None:
+            raise NotFoundError("cron not found")
+        self.server._require_member(identity, entry["colonyname"])
+        return self._fire(entry, now_ns())
+
+    # -- leader scan (step 2) -------------------------------------------------
+    def tick(self) -> int:
+        """Scan the cron table; fire everything past deadline. Leader-only."""
+        ts = now_ns()
+        fired = 0
+        for entry in self.db.kv_list(CRON_TABLE):
+            if ts > entry["deadline"]:
+                self._fire(entry, ts)
+                fired += 1
+        return fired
+
+    def _fire(self, entry: dict, ts: int) -> dict:
+        wf = WorkflowSpec.from_dict(entry["workflow"])
+        procs = self.server.submit_workflow_processes(wf)
+        entry = dict(entry)
+        entry["deadline"] = self._next_deadline(entry["interval"], entry["cronexpr"], ts)
+        entry["lastrun"] = ts
+        entry["runs"] = entry.get("runs", 0) + 1
+        entry["lastworkflowid"] = procs[0].workflowid
+        self.db.kv_put(CRON_TABLE, entry["cronid"], entry)
+        self.server._notify_queue()
+        self.triggered += 1
+        return entry

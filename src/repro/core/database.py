@@ -1,0 +1,728 @@
+"""Queue-as-database (paper §3.2–3.3).
+
+The paper's key departure from broker-based workflow systems: the queue
+IS a standard database table, so assignment can match *any* column
+(fine-grained per-executor targeting, capability matching, introspection)
+and ordering is a plain ``ORDER BY priority_time``.
+
+Two backends behind one interface:
+
+* :class:`SqliteDatabase` — faithful to the paper (Postgres in the Go
+  implementation): the candidate query is literally an ``ORDER BY
+  priority_time ASC`` SQL select; file-backed (survives restarts) or
+  ``:memory:``.
+* :class:`MemoryDatabase` — per-(colony, executortype) bisect-sorted
+  queues for broker micro-benchmarks; identical semantics.
+
+Only ``assign`` mutates shared queue state non-monotonically, so it is
+the only operation guarded by the assignment lock (paper §3.4.1:
+"synchronization is not necessary for other requests").
+"""
+
+from __future__ import annotations
+
+import bisect
+import json
+import sqlite3
+import threading
+from typing import Any, Iterable
+
+from .errors import ConflictError, NotFoundError
+from .process import (
+    FAILED,
+    RUNNING,
+    SUCCESSFUL,
+    WAITING,
+    Colony,
+    Executor,
+    Process,
+    now_ns,
+)
+
+
+class Database:
+    """Abstract storage interface shared by all Colonies server replicas."""
+
+    # -- colonies ---------------------------------------------------------
+    def add_colony(self, colony: Colony) -> None:
+        raise NotImplementedError
+
+    def get_colony(self, name: str) -> Colony:
+        raise NotImplementedError
+
+    def list_colonies(self) -> list[Colony]:
+        raise NotImplementedError
+
+    # -- executors --------------------------------------------------------
+    def add_executor(self, ex: Executor) -> None:
+        raise NotImplementedError
+
+    def get_executor(self, executorid: str) -> Executor:
+        raise NotImplementedError
+
+    def get_executor_by_name(self, colony: str, name: str) -> Executor:
+        raise NotImplementedError
+
+    def list_executors(self, colony: str) -> list[Executor]:
+        raise NotImplementedError
+
+    def set_executor_state(self, executorid: str, state: str) -> None:
+        raise NotImplementedError
+
+    def remove_executor(self, executorid: str) -> None:
+        raise NotImplementedError
+
+    def touch_executor(self, executorid: str, ts: int) -> None:
+        raise NotImplementedError
+
+    # -- function registry --------------------------------------------------
+    def add_function(self, executorid: str, colony: str, funcname: str) -> None:
+        raise NotImplementedError
+
+    def list_functions(self, colony: str, executorid: str | None = None) -> list[dict]:
+        raise NotImplementedError
+
+    # -- processes ----------------------------------------------------------
+    def add_process(self, p: Process) -> None:
+        raise NotImplementedError
+
+    def get_process(self, processid: str) -> Process:
+        raise NotImplementedError
+
+    def update_process(self, p: Process) -> None:
+        raise NotImplementedError
+
+    def candidates(
+        self, colony: str, executortype: str, executorname: str, limit: int = 8
+    ) -> list[Process]:
+        """Waiting, parent-free processes for this executor, oldest priority first."""
+        raise NotImplementedError
+
+    def list_processes(
+        self, colony: str, state: str | None = None, count: int = 100
+    ) -> list[Process]:
+        raise NotImplementedError
+
+    def running_past_deadline(self, ts: int) -> list[Process]:
+        raise NotImplementedError
+
+    def waiting_past_deadline(self, ts: int) -> list[Process]:
+        raise NotImplementedError
+
+    def delete_process(self, processid: str) -> None:
+        raise NotImplementedError
+
+    # -- key/value side tables (cron, generators, CFS metadata) -------------
+    def kv_put(self, table: str, key: str, value: dict) -> None:
+        raise NotImplementedError
+
+    def kv_get(self, table: str, key: str) -> dict | None:
+        raise NotImplementedError
+
+    def kv_del(self, table: str, key: str) -> None:
+        raise NotImplementedError
+
+    def kv_list(self, table: str) -> list[dict]:
+        raise NotImplementedError
+
+    def kv_append(self, table: str, key: str, value: dict) -> int:
+        """Append to a list bucket; returns new length (generator pack queues)."""
+        raise NotImplementedError
+
+    def kv_take_all(self, table: str, key: str) -> list[dict]:
+        """Atomically drain a list bucket."""
+        raise NotImplementedError
+
+    def kv_len(self, table: str, key: str) -> int:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# In-memory backend
+# ---------------------------------------------------------------------------
+
+
+class MemoryDatabase(Database):
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self._colonies: dict[str, Colony] = {}
+        self._executors: dict[str, Executor] = {}
+        self._functions: list[dict] = []
+        self._processes: dict[str, Process] = {}
+        # (colony, executortype) -> sorted list of (priority_time, processid)
+        self._queues: dict[tuple[str, str], list[tuple[int, str]]] = {}
+        self._kv: dict[str, dict[str, dict]] = {}
+        self._kvlists: dict[str, dict[str, list[dict]]] = {}
+
+    # colonies
+    def add_colony(self, colony: Colony) -> None:
+        with self._lock:
+            if colony.colonyname in self._colonies:
+                raise ConflictError(f"colony {colony.colonyname} exists")
+            self._colonies[colony.colonyname] = colony
+
+    def get_colony(self, name: str) -> Colony:
+        with self._lock:
+            c = self._colonies.get(name)
+            if c is None:
+                raise NotFoundError(f"colony {name} not found")
+            return c
+
+    def list_colonies(self) -> list[Colony]:
+        with self._lock:
+            return list(self._colonies.values())
+
+    # executors
+    def add_executor(self, ex: Executor) -> None:
+        with self._lock:
+            if ex.executorid in self._executors:
+                raise ConflictError("executor exists")
+            for other in self._executors.values():
+                if (
+                    other.colonyname == ex.colonyname
+                    and other.executorname == ex.executorname
+                ):
+                    raise ConflictError(f"executor name {ex.executorname} taken")
+            self._executors[ex.executorid] = ex
+
+    def get_executor(self, executorid: str) -> Executor:
+        with self._lock:
+            ex = self._executors.get(executorid)
+            if ex is None:
+                raise NotFoundError("executor not found")
+            return ex
+
+    def get_executor_by_name(self, colony: str, name: str) -> Executor:
+        with self._lock:
+            for ex in self._executors.values():
+                if ex.colonyname == colony and ex.executorname == name:
+                    return ex
+            raise NotFoundError(f"executor {name} not found")
+
+    def list_executors(self, colony: str) -> list[Executor]:
+        with self._lock:
+            return [e for e in self._executors.values() if e.colonyname == colony]
+
+    def set_executor_state(self, executorid: str, state: str) -> None:
+        with self._lock:
+            self.get_executor(executorid).state = state
+
+    def remove_executor(self, executorid: str) -> None:
+        with self._lock:
+            if executorid not in self._executors:
+                raise NotFoundError("executor not found")
+            del self._executors[executorid]
+
+    def touch_executor(self, executorid: str, ts: int) -> None:
+        with self._lock:
+            ex = self._executors.get(executorid)
+            if ex is not None:
+                ex.lastheardfrom_ns = ts
+
+    # functions
+    def add_function(self, executorid: str, colony: str, funcname: str) -> None:
+        with self._lock:
+            self._functions.append(
+                {"executorid": executorid, "colonyname": colony, "funcname": funcname}
+            )
+
+    def list_functions(self, colony: str, executorid: str | None = None) -> list[dict]:
+        with self._lock:
+            return [
+                dict(f)
+                for f in self._functions
+                if f["colonyname"] == colony
+                and (executorid is None or f["executorid"] == executorid)
+            ]
+
+    # processes
+    def _queue_key(self, p: Process) -> tuple[str, str]:
+        return (p.colonyname, p.spec.conditions.executortype)
+
+    def add_process(self, p: Process) -> None:
+        with self._lock:
+            self._processes[p.processid] = p
+            self._enqueue(p)
+
+    def _enqueue(self, p: Process) -> None:
+        q = self._queues.setdefault(self._queue_key(p), [])
+        bisect.insort(q, (p.priority_time, p.processid))
+
+    def get_process(self, processid: str) -> Process:
+        with self._lock:
+            p = self._processes.get(processid)
+            if p is None:
+                raise NotFoundError(f"process {processid} not found")
+            return p
+
+    def update_process(self, p: Process) -> None:
+        with self._lock:
+            if p.processid not in self._processes:
+                raise NotFoundError("process not found")
+            self._processes[p.processid] = p
+
+    def requeue(self, p: Process) -> None:
+        """Re-insert a reset process (failsafe path)."""
+        with self._lock:
+            self._enqueue(p)
+
+    def candidates(
+        self, colony: str, executortype: str, executorname: str, limit: int = 8
+    ) -> list[Process]:
+        with self._lock:
+            q = self._queues.get((colony, executortype), [])
+            out: list[Process] = []
+            stale: list[tuple[int, str]] = []
+            for item in q:
+                _, pid = item
+                p = self._processes.get(pid)
+                if p is None or p.state != WAITING:
+                    stale.append(item)  # lazily drop assigned/closed entries
+                    continue
+                if p.wait_for_parents:
+                    continue
+                targets = p.spec.conditions.executornames
+                if targets and executorname not in targets:
+                    continue
+                out.append(p)
+                if len(out) >= limit:
+                    break
+            for item in stale:
+                q.remove(item)
+            return out
+
+    def list_processes(
+        self, colony: str, state: str | None = None, count: int = 100
+    ) -> list[Process]:
+        with self._lock:
+            out = [
+                p
+                for p in self._processes.values()
+                if p.colonyname == colony and (state is None or p.state == state)
+            ]
+            out.sort(key=lambda p: p.priority_time)
+            return out[:count]
+
+    def running_past_deadline(self, ts: int) -> list[Process]:
+        with self._lock:
+            return [
+                p
+                for p in self._processes.values()
+                if p.state == RUNNING and p.deadline_ns and p.deadline_ns < ts
+            ]
+
+    def waiting_past_deadline(self, ts: int) -> list[Process]:
+        with self._lock:
+            return [
+                p
+                for p in self._processes.values()
+                if p.state == WAITING and p.waitdeadline_ns and p.waitdeadline_ns < ts
+            ]
+
+    def delete_process(self, processid: str) -> None:
+        with self._lock:
+            self._processes.pop(processid, None)
+
+    # kv
+    def kv_put(self, table: str, key: str, value: dict) -> None:
+        with self._lock:
+            self._kv.setdefault(table, {})[key] = dict(value)
+
+    def kv_get(self, table: str, key: str) -> dict | None:
+        with self._lock:
+            v = self._kv.get(table, {}).get(key)
+            return dict(v) if v is not None else None
+
+    def kv_del(self, table: str, key: str) -> None:
+        with self._lock:
+            self._kv.get(table, {}).pop(key, None)
+
+    def kv_list(self, table: str) -> list[dict]:
+        with self._lock:
+            return [dict(v) for v in self._kv.get(table, {}).values()]
+
+    def kv_append(self, table: str, key: str, value: dict) -> int:
+        with self._lock:
+            lst = self._kvlists.setdefault(table, {}).setdefault(key, [])
+            lst.append(dict(value))
+            return len(lst)
+
+    def kv_take_all(self, table: str, key: str) -> list[dict]:
+        with self._lock:
+            lst = self._kvlists.get(table, {}).pop(key, [])
+            return lst
+
+    def kv_len(self, table: str, key: str) -> int:
+        with self._lock:
+            return len(self._kvlists.get(table, {}).get(key, []))
+
+
+# ---------------------------------------------------------------------------
+# Sqlite backend — the paper's SQL queue, verbatim semantics
+# ---------------------------------------------------------------------------
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS colonies (
+    colonyname TEXT PRIMARY KEY, colonyid TEXT NOT NULL
+);
+CREATE TABLE IF NOT EXISTS executors (
+    executorid TEXT PRIMARY KEY, executorname TEXT, executortype TEXT,
+    colonyname TEXT, state TEXT, commissiontime INTEGER, lastheardfrom INTEGER,
+    capabilities TEXT,
+    UNIQUE(colonyname, executorname)
+);
+CREATE TABLE IF NOT EXISTS functions (
+    executorid TEXT, colonyname TEXT, funcname TEXT
+);
+CREATE TABLE IF NOT EXISTS processes (
+    processid TEXT PRIMARY KEY,
+    colonyname TEXT NOT NULL,
+    executortype TEXT NOT NULL,
+    state TEXT NOT NULL,
+    waitforparents INTEGER NOT NULL DEFAULT 0,
+    prioritytime INTEGER NOT NULL,
+    deadline INTEGER NOT NULL DEFAULT 0,
+    waitdeadline INTEGER NOT NULL DEFAULT 0,
+    body TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_proc_queue
+    ON processes (colonyname, executortype, state, waitforparents, prioritytime);
+CREATE INDEX IF NOT EXISTS idx_proc_deadline ON processes (state, deadline);
+CREATE TABLE IF NOT EXISTS kv (
+    tbl TEXT NOT NULL, key TEXT NOT NULL, value TEXT NOT NULL,
+    PRIMARY KEY (tbl, key)
+);
+CREATE TABLE IF NOT EXISTS kvlist (
+    tbl TEXT NOT NULL, key TEXT NOT NULL, seq INTEGER NOT NULL, value TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_kvlist ON kvlist (tbl, key, seq);
+"""
+
+
+class SqliteDatabase(Database):
+    """File-backed (or ``:memory:``) SQL queue.
+
+    The candidate query is the paper's: ``ORDER BY prioritytime ASC`` over
+    indexed (colony, executortype, state, waitforparents) columns.
+    """
+
+    def __init__(self, path: str = ":memory:") -> None:
+        self._lock = threading.RLock()
+        self._conn = sqlite3.connect(path, check_same_thread=False)
+        self._conn.execute("PRAGMA journal_mode=WAL")
+        self._conn.executescript(_SCHEMA)
+        self._conn.commit()
+
+    def _exec(self, sql: str, args: Iterable[Any] = ()) -> sqlite3.Cursor:
+        return self._conn.execute(sql, tuple(args))
+
+    # colonies
+    def add_colony(self, colony: Colony) -> None:
+        with self._lock:
+            try:
+                self._exec(
+                    "INSERT INTO colonies VALUES (?, ?)",
+                    (colony.colonyname, colony.colonyid),
+                )
+                self._conn.commit()
+            except sqlite3.IntegrityError as e:
+                raise ConflictError(f"colony {colony.colonyname} exists") from e
+
+    def get_colony(self, name: str) -> Colony:
+        with self._lock:
+            row = self._exec(
+                "SELECT colonyname, colonyid FROM colonies WHERE colonyname=?", (name,)
+            ).fetchone()
+            if row is None:
+                raise NotFoundError(f"colony {name} not found")
+            return Colony(colonyname=row[0], colonyid=row[1])
+
+    def list_colonies(self) -> list[Colony]:
+        with self._lock:
+            rows = self._exec("SELECT colonyname, colonyid FROM colonies").fetchall()
+            return [Colony(colonyname=r[0], colonyid=r[1]) for r in rows]
+
+    # executors
+    def add_executor(self, ex: Executor) -> None:
+        with self._lock:
+            try:
+                self._exec(
+                    "INSERT INTO executors VALUES (?,?,?,?,?,?,?,?)",
+                    (
+                        ex.executorid,
+                        ex.executorname,
+                        ex.executortype,
+                        ex.colonyname,
+                        ex.state,
+                        ex.commissiontime_ns,
+                        ex.lastheardfrom_ns,
+                        json.dumps(ex.capabilities),
+                    ),
+                )
+                self._conn.commit()
+            except sqlite3.IntegrityError as e:
+                raise ConflictError("executor exists or name taken") from e
+
+    @staticmethod
+    def _row_to_executor(row: tuple) -> Executor:
+        return Executor(
+            executorid=row[0],
+            executorname=row[1],
+            executortype=row[2],
+            colonyname=row[3],
+            state=row[4],
+            commissiontime_ns=row[5],
+            lastheardfrom_ns=row[6],
+            capabilities=json.loads(row[7] or "{}"),
+        )
+
+    def get_executor(self, executorid: str) -> Executor:
+        with self._lock:
+            row = self._exec(
+                "SELECT * FROM executors WHERE executorid=?", (executorid,)
+            ).fetchone()
+            if row is None:
+                raise NotFoundError("executor not found")
+            return self._row_to_executor(row)
+
+    def get_executor_by_name(self, colony: str, name: str) -> Executor:
+        with self._lock:
+            row = self._exec(
+                "SELECT * FROM executors WHERE colonyname=? AND executorname=?",
+                (colony, name),
+            ).fetchone()
+            if row is None:
+                raise NotFoundError(f"executor {name} not found")
+            return self._row_to_executor(row)
+
+    def list_executors(self, colony: str) -> list[Executor]:
+        with self._lock:
+            rows = self._exec(
+                "SELECT * FROM executors WHERE colonyname=?", (colony,)
+            ).fetchall()
+            return [self._row_to_executor(r) for r in rows]
+
+    def set_executor_state(self, executorid: str, state: str) -> None:
+        with self._lock:
+            cur = self._exec(
+                "UPDATE executors SET state=? WHERE executorid=?", (state, executorid)
+            )
+            if cur.rowcount == 0:
+                raise NotFoundError("executor not found")
+            self._conn.commit()
+
+    def remove_executor(self, executorid: str) -> None:
+        with self._lock:
+            cur = self._exec("DELETE FROM executors WHERE executorid=?", (executorid,))
+            if cur.rowcount == 0:
+                raise NotFoundError("executor not found")
+            self._conn.commit()
+
+    def touch_executor(self, executorid: str, ts: int) -> None:
+        with self._lock:
+            self._exec(
+                "UPDATE executors SET lastheardfrom=? WHERE executorid=?",
+                (ts, executorid),
+            )
+            self._conn.commit()
+
+    # functions
+    def add_function(self, executorid: str, colony: str, funcname: str) -> None:
+        with self._lock:
+            self._exec(
+                "INSERT INTO functions VALUES (?,?,?)", (executorid, colony, funcname)
+            )
+            self._conn.commit()
+
+    def list_functions(self, colony: str, executorid: str | None = None) -> list[dict]:
+        with self._lock:
+            if executorid is None:
+                rows = self._exec(
+                    "SELECT executorid, colonyname, funcname FROM functions WHERE colonyname=?",
+                    (colony,),
+                ).fetchall()
+            else:
+                rows = self._exec(
+                    "SELECT executorid, colonyname, funcname FROM functions"
+                    " WHERE colonyname=? AND executorid=?",
+                    (colony, executorid),
+                ).fetchall()
+            return [
+                {"executorid": r[0], "colonyname": r[1], "funcname": r[2]} for r in rows
+            ]
+
+    # processes
+    def _write_process(self, p: Process, insert: bool) -> None:
+        body = p.to_json()
+        if insert:
+            self._exec(
+                "INSERT INTO processes VALUES (?,?,?,?,?,?,?,?,?)",
+                (
+                    p.processid,
+                    p.colonyname,
+                    p.spec.conditions.executortype,
+                    p.state,
+                    int(p.wait_for_parents),
+                    p.priority_time,
+                    p.deadline_ns,
+                    p.waitdeadline_ns,
+                    body,
+                ),
+            )
+        else:
+            cur = self._exec(
+                "UPDATE processes SET state=?, waitforparents=?, prioritytime=?,"
+                " deadline=?, waitdeadline=?, body=? WHERE processid=?",
+                (
+                    p.state,
+                    int(p.wait_for_parents),
+                    p.priority_time,
+                    p.deadline_ns,
+                    p.waitdeadline_ns,
+                    body,
+                    p.processid,
+                ),
+            )
+            if cur.rowcount == 0:
+                raise NotFoundError("process not found")
+        self._conn.commit()
+
+    def add_process(self, p: Process) -> None:
+        with self._lock:
+            self._write_process(p, insert=True)
+
+    def get_process(self, processid: str) -> Process:
+        with self._lock:
+            row = self._exec(
+                "SELECT body FROM processes WHERE processid=?", (processid,)
+            ).fetchone()
+            if row is None:
+                raise NotFoundError(f"process {processid} not found")
+            return Process.from_json(row[0])
+
+    def update_process(self, p: Process) -> None:
+        with self._lock:
+            self._write_process(p, insert=False)
+
+    def candidates(
+        self, colony: str, executortype: str, executorname: str, limit: int = 8
+    ) -> list[Process]:
+        with self._lock:
+            # The paper's queue query (§3.3): the table *is* the queue.
+            rows = self._exec(
+                "SELECT body FROM processes"
+                " WHERE colonyname=? AND executortype=? AND state=? AND waitforparents=0"
+                " ORDER BY prioritytime ASC LIMIT ?",
+                (colony, executortype, WAITING, limit * 4),
+            ).fetchall()
+            out = []
+            for (body,) in rows:
+                p = Process.from_json(body)
+                targets = p.spec.conditions.executornames
+                if targets and executorname not in targets:
+                    continue
+                out.append(p)
+                if len(out) >= limit:
+                    break
+            return out
+
+    def list_processes(
+        self, colony: str, state: str | None = None, count: int = 100
+    ) -> list[Process]:
+        with self._lock:
+            if state is None:
+                rows = self._exec(
+                    "SELECT body FROM processes WHERE colonyname=?"
+                    " ORDER BY prioritytime ASC LIMIT ?",
+                    (colony, count),
+                ).fetchall()
+            else:
+                rows = self._exec(
+                    "SELECT body FROM processes WHERE colonyname=? AND state=?"
+                    " ORDER BY prioritytime ASC LIMIT ?",
+                    (colony, state, count),
+                ).fetchall()
+            return [Process.from_json(r[0]) for r in rows]
+
+    def running_past_deadline(self, ts: int) -> list[Process]:
+        with self._lock:
+            rows = self._exec(
+                "SELECT body FROM processes WHERE state=? AND deadline>0 AND deadline<?",
+                (RUNNING, ts),
+            ).fetchall()
+            return [Process.from_json(r[0]) for r in rows]
+
+    def waiting_past_deadline(self, ts: int) -> list[Process]:
+        with self._lock:
+            rows = self._exec(
+                "SELECT body FROM processes WHERE state=? AND waitdeadline>0 AND waitdeadline<?",
+                (WAITING, ts),
+            ).fetchall()
+            return [Process.from_json(r[0]) for r in rows]
+
+    def delete_process(self, processid: str) -> None:
+        with self._lock:
+            self._exec("DELETE FROM processes WHERE processid=?", (processid,))
+            self._conn.commit()
+
+    def requeue(self, p: Process) -> None:  # row update already re-queues in SQL
+        pass
+
+    # kv
+    def kv_put(self, table: str, key: str, value: dict) -> None:
+        with self._lock:
+            self._exec(
+                "INSERT INTO kv VALUES (?,?,?) ON CONFLICT(tbl,key) DO UPDATE SET value=excluded.value",
+                (table, key, json.dumps(value)),
+            )
+            self._conn.commit()
+
+    def kv_get(self, table: str, key: str) -> dict | None:
+        with self._lock:
+            row = self._exec(
+                "SELECT value FROM kv WHERE tbl=? AND key=?", (table, key)
+            ).fetchone()
+            return json.loads(row[0]) if row else None
+
+    def kv_del(self, table: str, key: str) -> None:
+        with self._lock:
+            self._exec("DELETE FROM kv WHERE tbl=? AND key=?", (table, key))
+            self._conn.commit()
+
+    def kv_list(self, table: str) -> list[dict]:
+        with self._lock:
+            rows = self._exec("SELECT value FROM kv WHERE tbl=?", (table,)).fetchall()
+            return [json.loads(r[0]) for r in rows]
+
+    def kv_append(self, table: str, key: str, value: dict) -> int:
+        with self._lock:
+            row = self._exec(
+                "SELECT COALESCE(MAX(seq), -1) FROM kvlist WHERE tbl=? AND key=?",
+                (table, key),
+            ).fetchone()
+            seq = row[0] + 1
+            self._exec(
+                "INSERT INTO kvlist VALUES (?,?,?,?)",
+                (table, key, seq, json.dumps(value)),
+            )
+            self._conn.commit()
+            cnt = self._exec(
+                "SELECT COUNT(*) FROM kvlist WHERE tbl=? AND key=?", (table, key)
+            ).fetchone()[0]
+            return cnt
+
+    def kv_take_all(self, table: str, key: str) -> list[dict]:
+        with self._lock:
+            rows = self._exec(
+                "SELECT value FROM kvlist WHERE tbl=? AND key=? ORDER BY seq",
+                (table, key),
+            ).fetchall()
+            self._exec("DELETE FROM kvlist WHERE tbl=? AND key=?", (table, key))
+            self._conn.commit()
+            return [json.loads(r[0]) for r in rows]
+
+    def kv_len(self, table: str, key: str) -> int:
+        with self._lock:
+            return self._exec(
+                "SELECT COUNT(*) FROM kvlist WHERE tbl=? AND key=?", (table, key)
+            ).fetchone()[0]

@@ -1,0 +1,160 @@
+"""Executor microservice base (paper §3.1, §4.1 Listings 3–4).
+
+An executor is a small, independently deployable service that:
+  1. generates an identity and is registered+approved by the colony owner,
+  2. announces the functions it can run,
+  3. long-polls ``assign`` and dispatches to registered handlers,
+  4. closes processes with output (or failure), optionally extending the
+     DAG with dynamic children.
+
+Function handlers receive ``(ctx, *args, **kwargs)`` where ``ctx`` exposes
+the process, the SDK client and CFS sync helpers.
+"""
+
+from __future__ import annotations
+
+import threading
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from .client import Colonies
+from .crypto import Crypto
+from .errors import ColoniesError, ConflictError, NotLeaderError, TimeoutError_
+from .process import Process
+
+
+@dataclass
+class ProcessContext:
+    process: Process
+    client: Colonies
+    executor: "ExecutorBase"
+    workdir: str = ""
+    extras: dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def inputs(self) -> list[Any]:
+        return self.process.inputs
+
+    def add_child(self, spec: dict, waitforparent: bool = False) -> dict:
+        return self.client.add_child(
+            self.process.processid, spec, self.executor.prvkey, waitforparent
+        )
+
+
+class ExecutorBase:
+    """Long-poll worker; subclass or register function handlers directly."""
+
+    def __init__(
+        self,
+        client: Colonies,
+        colonyname: str,
+        executorname: str,
+        executortype: str,
+        colony_prvkey: str | None = None,
+        prvkey: str | None = None,
+        capabilities: dict[str, Any] | None = None,
+    ) -> None:
+        self.client = client
+        self.colonyname = colonyname
+        self.executorname = executorname
+        self.executortype = executortype
+        self.prvkey = prvkey or Crypto.prvkey()
+        self.executorid = Crypto.id(self.prvkey)
+        self.capabilities = capabilities or {}
+        self._handlers: dict[str, Callable[..., Any]] = {}
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.processed = 0
+        self.failed = 0
+        if colony_prvkey is not None:
+            self.register(colony_prvkey)
+
+    # ------------------------------------------------------------ lifecycle
+    def register(self, colony_prvkey: str) -> None:
+        self.client.add_executor(
+            {
+                "executorname": self.executorname,
+                "executorid": self.executorid,
+                "colonyname": self.colonyname,
+                "executortype": self.executortype,
+                "capabilities": self.capabilities,
+            },
+            colony_prvkey,
+        )
+        self.client.approve_executor(self.executorid, colony_prvkey)
+
+    def register_function(self, funcname: str, fn: Callable[..., Any]) -> None:
+        self._handlers[funcname] = fn
+        self.client.add_function(self.executorid, self.colonyname, funcname, self.prvkey)
+
+    # ------------------------------------------------------------ main loop
+    def step(self, timeout: float = 1.0) -> bool:
+        """One assign+execute+close cycle; returns True if a process ran."""
+        try:
+            pd = self.client.assign(self.colonyname, timeout, self.prvkey)
+        except (TimeoutError_, NotLeaderError):
+            return False
+        process = Process.from_dict(pd)
+        self._execute(process)
+        return True
+
+    def _execute(self, process: Process) -> None:
+        funcname = process.spec.funcname
+        fn = self._handlers.get(funcname)
+        ctx = ProcessContext(process=process, client=self.client, executor=self)
+        try:
+            if fn is None:
+                raise ColoniesError(f"no handler for function {funcname!r}")
+            self._sync_before(ctx)
+            out = fn(ctx, *process.spec.args, **process.spec.kwargs)
+            self._sync_after(ctx)
+            if out is None:
+                out = []
+            elif not isinstance(out, list):
+                out = [out]
+            self.client.close(process.processid, out, self.prvkey)
+            self.processed += 1
+        except ConflictError:
+            # Lost the lease (failsafe reset while we were computing) —
+            # the paper's expected behaviour; drop the result silently.
+            self.failed += 1
+        except Exception as e:  # noqa: BLE001 — report any failure to the broker
+            if getattr(e, "simulate_crash", False):
+                # Chaos: vanish WITHOUT closing — the broker's maxexectime
+                # failsafe must detect the lost lease and re-queue.
+                raise
+            self.failed += 1
+            try:
+                self.client.fail(
+                    process.processid,
+                    [f"{type(e).__name__}: {e}", traceback.format_exc(limit=5)],
+                    self.prvkey,
+                )
+            except ColoniesError:
+                pass
+
+    # CFS hooks — overridden by executors that mount snapshots (runtime/).
+    def _sync_before(self, ctx: ProcessContext) -> None:
+        pass
+
+    def _sync_after(self, ctx: ProcessContext) -> None:
+        pass
+
+    def run_forever(self, poll_timeout: float = 1.0) -> None:
+        while not self._stop.is_set():
+            try:
+                self.step(poll_timeout)
+            except ColoniesError:
+                self._stop.wait(0.05)
+
+    def start(self, poll_timeout: float = 1.0) -> None:
+        self._thread = threading.Thread(
+            target=self.run_forever, args=(poll_timeout,), daemon=True
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)

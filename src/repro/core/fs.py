@@ -1,0 +1,344 @@
+"""CFS — the Colony FileSystem (paper §3.4.5).
+
+A *meta*-filesystem: the Colonies database stores only metadata (names,
+labels, checksums, sizes, storage references); bytes live in pluggable
+storage backends (S3/IPFS in the paper; content-addressed local/memory
+stores here — same contract).
+
+Invariants implemented exactly as the paper argues:
+  * **Immutability** — a file revision is never altered; re-adding the
+    same (label, name) creates a new revision. Caching and race-freedom
+    follow.
+  * **Snapshots** — immutable pins of a whole label tree (directory), so
+    queued processes see frozen inputs no matter how long they wait.
+  * **Sync directives** — function specs carry ``fs.snapshots``/``fs.dirs``
+    blocks; executors materialize them before execution and upload
+    results after (see runtime/jax_executor.py).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import secrets
+import threading
+from typing import Any, Callable
+
+from .database import Database
+from .errors import AuthError, ConflictError, NotFoundError, ValidationError
+from .process import now_ns
+
+FILES_TABLE = "cfs_files"
+SNAPSHOTS_TABLE = "cfs_snapshots"
+
+
+def checksum(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Storage backends (the bytes plane)
+# ---------------------------------------------------------------------------
+
+
+class Storage:
+    """Content-addressed blob store."""
+
+    scheme = "abstract"
+
+    def put(self, data: bytes) -> str:
+        """Store bytes, return an URL."""
+        raise NotImplementedError
+
+    def get(self, url: str) -> bytes:
+        raise NotImplementedError
+
+
+class MemoryStorage(Storage):
+    scheme = "mem"
+
+    def __init__(self) -> None:
+        self._blobs: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def put(self, data: bytes) -> str:
+        key = checksum(data)
+        with self._lock:
+            self._blobs[key] = bytes(data)
+        return f"mem://{key}"
+
+    def get(self, url: str) -> bytes:
+        key = url.split("://", 1)[1]
+        with self._lock:
+            if key not in self._blobs:
+                raise NotFoundError(f"blob {url} not found")
+            return self._blobs[key]
+
+
+class LocalStorage(Storage):
+    """Directory-backed content-addressed store (stands in for S3)."""
+
+    scheme = "local"
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def put(self, data: bytes) -> str:
+        key = checksum(data)
+        path = os.path.join(self.root, key)
+        if not os.path.exists(path):  # immutable: same content = same blob
+            tmp = path + f".tmp{secrets.token_hex(4)}"
+            with open(tmp, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        return f"local://{key}"
+
+    def get(self, url: str) -> bytes:
+        key = url.split("://", 1)[1]
+        path = os.path.join(self.root, key)
+        if not os.path.exists(path):
+            raise NotFoundError(f"blob {url} not found")
+        with open(path, "rb") as f:
+            return f.read()
+
+
+# ---------------------------------------------------------------------------
+# Server-side extension: metadata handlers
+# ---------------------------------------------------------------------------
+
+
+class CFSExtension:
+    """Registers CFS metadata RPCs on a ColoniesServer."""
+
+    def __init__(self, server) -> None:
+        self.server = server
+        self.db: Database = server.db
+        server.extensions.append(self)
+
+    def handlers(self) -> dict[str, Callable[[str, dict], Any]]:
+        return {
+            "addfile": self._h_add_file,
+            "getfile": self._h_get_file,
+            "getfiles": self._h_get_files,
+            "removefile": self._h_remove_file,
+            "createsnapshot": self._h_create_snapshot,
+            "getsnapshot": self._h_get_snapshot,
+            "removesnapshot": self._h_remove_snapshot,
+        }
+
+    # no periodic work
+    def tick(self) -> None:
+        pass
+
+    @staticmethod
+    def _norm_label(label: str) -> str:
+        if not label.startswith("/"):
+            label = "/" + label
+        return label.rstrip("/") or "/"
+
+    def _h_add_file(self, identity: str, payload: dict) -> dict:
+        f = payload["file"]
+        colony = f.get("colonyname", "")
+        self.server._require_member(identity, colony)
+        label = self._norm_label(f.get("label", "/"))
+        name = f.get("name", "")
+        if not name:
+            raise ValidationError("file needs a name")
+        if not f.get("checksum"):
+            raise ValidationError("file needs a checksum (immutability contract)")
+        prev = self._latest(colony, label, name)
+        entry = {
+            "fileid": secrets.token_hex(16),
+            "colonyname": colony,
+            "label": label,
+            "name": name,
+            "size": int(f.get("size", 0)),
+            "checksum": f["checksum"],
+            "revision": (prev["revision"] + 1) if prev else 1,
+            "storage": dict(f.get("storage", {})),  # {"backend": scheme, "url": ...}
+            "added": now_ns(),
+            "addedby": identity,
+        }
+        self.db.kv_put(FILES_TABLE, entry["fileid"], entry)
+        return entry
+
+    def _files(self, colony: str) -> list[dict]:
+        return [
+            e for e in self.db.kv_list(FILES_TABLE) if e["colonyname"] == colony
+        ]
+
+    def _latest(self, colony: str, label: str, name: str) -> dict | None:
+        best = None
+        for e in self._files(colony):
+            if e["label"] == label and e["name"] == name:
+                if best is None or e["revision"] > best["revision"]:
+                    best = e
+        return best
+
+    def _h_get_file(self, identity: str, payload: dict) -> dict:
+        colony = payload["colonyname"]
+        self.server._require_member(identity, colony)
+        if "fileid" in payload:
+            e = self.db.kv_get(FILES_TABLE, payload["fileid"])
+            if e is None or e["colonyname"] != colony:
+                raise NotFoundError("file not found")
+            return e
+        label = self._norm_label(payload["label"])
+        e = self._latest(colony, label, payload["name"])
+        if e is None:
+            raise NotFoundError(f"file {label}/{payload['name']} not found")
+        return e
+
+    def _h_get_files(self, identity: str, payload: dict) -> list[dict]:
+        colony = payload["colonyname"]
+        self.server._require_member(identity, colony)
+        label = self._norm_label(payload["label"])
+        latest: dict[str, dict] = {}
+        for e in self._files(colony):
+            if e["label"] == label or e["label"].startswith(label + "/"):
+                key = e["label"] + "/" + e["name"]
+                if key not in latest or e["revision"] > latest[key]["revision"]:
+                    latest[key] = e
+        return sorted(latest.values(), key=lambda e: (e["label"], e["name"]))
+
+    def _h_remove_file(self, identity: str, payload: dict) -> dict:
+        colony = payload["colonyname"]
+        self.server._require_member(identity, colony)
+        fileid = payload["fileid"]
+        e = self.db.kv_get(FILES_TABLE, fileid)
+        if e is None or e["colonyname"] != colony:
+            raise NotFoundError("file not found")
+        # Immutability: a revision pinned by a snapshot cannot be removed.
+        for s in self.db.kv_list(SNAPSHOTS_TABLE):
+            if fileid in s.get("fileids", []):
+                raise ConflictError("file revision pinned by snapshot " + s["snapshotid"])
+        self.db.kv_del(FILES_TABLE, fileid)
+        return {"fileid": fileid, "removed": True}
+
+    def _h_create_snapshot(self, identity: str, payload: dict) -> dict:
+        colony = payload["colonyname"]
+        self.server._require_member(identity, colony)
+        label = self._norm_label(payload["label"])
+        name = payload.get("name", "")
+        files = self._h_get_files(identity, {"colonyname": colony, "label": label})
+        snap = {
+            "snapshotid": secrets.token_hex(16),
+            "colonyname": colony,
+            "name": name,
+            "label": label,
+            "fileids": [f["fileid"] for f in files],
+            "added": now_ns(),
+        }
+        self.db.kv_put(SNAPSHOTS_TABLE, snap["snapshotid"], snap)
+        return snap
+
+    def _h_get_snapshot(self, identity: str, payload: dict) -> dict:
+        colony = payload["colonyname"]
+        self.server._require_member(identity, colony)
+        s = self.db.kv_get(SNAPSHOTS_TABLE, payload["snapshotid"])
+        if s is None or s["colonyname"] != colony:
+            raise NotFoundError("snapshot not found")
+        s = dict(s)
+        s["files"] = [self.db.kv_get(FILES_TABLE, fid) for fid in s["fileids"]]
+        return s
+
+    def _h_remove_snapshot(self, identity: str, payload: dict) -> dict:
+        colony = payload["colonyname"]
+        self.server._require_member(identity, colony)
+        sid = payload["snapshotid"]
+        if self.db.kv_get(SNAPSHOTS_TABLE, sid) is None:
+            raise NotFoundError("snapshot not found")
+        self.db.kv_del(SNAPSHOTS_TABLE, sid)
+        return {"snapshotid": sid, "removed": True}
+
+
+# ---------------------------------------------------------------------------
+# Client-side sync helper (what executors use)
+# ---------------------------------------------------------------------------
+
+
+class CFSClient:
+    """Upload/download helper pairing the metadata plane with a Storage."""
+
+    def __init__(self, client, storage: Storage, prvkey: str) -> None:
+        self.client = client
+        self.storage = storage
+        self.prvkey = prvkey
+
+    # -- single files -------------------------------------------------------
+    def upload_bytes(self, colony: str, label: str, name: str, data: bytes) -> dict:
+        url = self.storage.put(data)
+        return self.client.add_file(
+            {
+                "colonyname": colony,
+                "label": label,
+                "name": name,
+                "size": len(data),
+                "checksum": checksum(data),
+                "storage": {"backend": self.storage.scheme, "url": url},
+            },
+            self.prvkey,
+        )
+
+    def download_bytes(self, colony: str, label: str, name: str) -> bytes:
+        meta = self.client.get_file(colony, label, name, self.prvkey)
+        data = self.storage.get(meta["storage"]["url"])
+        if checksum(data) != meta["checksum"]:
+            raise ConflictError(f"checksum mismatch for {label}/{name}")
+        return data
+
+    # -- directory sync -------------------------------------------------------
+    def sync_up(self, colony: str, label: str, localdir: str) -> list[dict]:
+        """Upload every file under localdir to the label (new revisions)."""
+        out = []
+        for root, _dirs, files in os.walk(localdir):
+            for fn in sorted(files):
+                path = os.path.join(root, fn)
+                rel = os.path.relpath(path, localdir)
+                sub = os.path.dirname(rel)
+                lbl = label if not sub else label.rstrip("/") + "/" + sub.replace(os.sep, "/")
+                with open(path, "rb") as f:
+                    out.append(self.upload_bytes(colony, lbl, os.path.basename(rel), f.read()))
+        return out
+
+    def sync_down(self, colony: str, label: str, localdir: str) -> list[str]:
+        """Materialize the latest revision of every file under label."""
+        os.makedirs(localdir, exist_ok=True)
+        written = []
+        for meta in self.client.get_files(colony, label, self.prvkey):
+            rel_label = meta["label"][len(self._norm(label)) :].lstrip("/")
+            dest_dir = os.path.join(localdir, rel_label) if rel_label else localdir
+            os.makedirs(dest_dir, exist_ok=True)
+            data = self.storage.get(meta["storage"]["url"])
+            if checksum(data) != meta["checksum"]:
+                raise ConflictError(f"checksum mismatch for {meta['name']}")
+            path = os.path.join(dest_dir, meta["name"])
+            with open(path, "wb") as f:
+                f.write(data)
+            written.append(path)
+        return written
+
+    def materialize_snapshot(self, colony: str, snapshotid: str, localdir: str) -> list[str]:
+        """Write a pinned snapshot's exact revisions into localdir."""
+        snap = self.client.get_snapshot(colony, snapshotid, self.prvkey)
+        os.makedirs(localdir, exist_ok=True)
+        written = []
+        for meta in snap["files"]:
+            data = self.storage.get(meta["storage"]["url"])
+            if checksum(data) != meta["checksum"]:
+                raise ConflictError(f"checksum mismatch for {meta['name']}")
+            rel_label = meta["label"][len(snap["label"]) :].lstrip("/")
+            dest_dir = os.path.join(localdir, rel_label) if rel_label else localdir
+            os.makedirs(dest_dir, exist_ok=True)
+            path = os.path.join(dest_dir, meta["name"])
+            with open(path, "wb") as f:
+                f.write(data)
+            written.append(path)
+        return written
+
+    @staticmethod
+    def _norm(label: str) -> str:
+        if not label.startswith("/"):
+            label = "/" + label
+        return label.rstrip("/") or "/"

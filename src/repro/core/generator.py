@@ -1,0 +1,146 @@
+"""Generators — threshold-triggered workflow templates (paper §3.4.4).
+
+Third-party systems integrate fire-and-forget: they send ``pack`` requests
+carrying one input datum each. ``pack`` only *appends* to the generator's
+arg bucket (no state manipulation → no synchronization, any replica can
+serve it, exactly the paper's argument). The elected leader scans the
+generator table and, when ``queuesize`` args have accumulated — or
+``timeout`` elapsed since the first pending arg — drains the bucket and
+submits the template workflow with the packed args attached.
+
+This is also how the serving stack implements **dynamic batching**:
+each inference request is a pack; the generator emits one batched
+inference workflow per ``queuesize`` requests (serve/batcher.py).
+"""
+
+from __future__ import annotations
+
+import secrets
+from typing import Any, Callable
+
+from .database import Database
+from .errors import NotFoundError, ValidationError
+from .process import now_ns
+from .spec import WorkflowSpec
+
+GENERATORS_TABLE = "generators"
+PACKS_TABLE = "generator_packs"
+
+
+class GeneratorExtension:
+    def __init__(self, server) -> None:
+        self.server = server
+        self.db: Database = server.db
+        server.extensions.append(self)
+        self.triggered = 0
+
+    def handlers(self) -> dict[str, Callable[[str, dict], Any]]:
+        return {
+            "addgenerator": self._h_add_generator,
+            "getgenerators": self._h_get_generators,
+            "removegenerator": self._h_remove_generator,
+            "pack": self._h_pack,
+        }
+
+    def _h_add_generator(self, identity: str, payload: dict) -> dict:
+        g = payload["generator"]
+        colony = g.get("colonyname", "")
+        self.server._require_member(identity, colony)
+        wf = WorkflowSpec.from_dict(g.get("workflow", {}))
+        if not wf.specs:
+            raise ValidationError("generator needs a workflow template")
+        for s in wf.specs:
+            s.conditions.colonyname = s.conditions.colonyname or colony
+        wf.colonyname = colony
+        wf.validate()
+        queuesize = int(g.get("queuesize", 1))
+        if queuesize < 1:
+            raise ValidationError("queuesize must be >= 1")
+        entry = {
+            "generatorid": secrets.token_hex(16),
+            "colonyname": colony,
+            "name": g.get("name", ""),
+            "workflow": wf.to_dict(),
+            "queuesize": queuesize,
+            "timeout": float(g.get("timeout", 0)),  # seconds; 0 = only threshold
+            "firstpack": 0,
+            "runs": 0,
+        }
+        self.db.kv_put(GENERATORS_TABLE, entry["generatorid"], entry)
+        return entry
+
+    def _h_get_generators(self, identity: str, payload: dict) -> list[dict]:
+        colony = payload["colonyname"]
+        self.server._require_member(identity, colony)
+        out = []
+        for e in self.db.kv_list(GENERATORS_TABLE):
+            if e["colonyname"] == colony:
+                e = dict(e)
+                e["pending"] = self.db.kv_len(PACKS_TABLE, e["generatorid"])
+                out.append(e)
+        return out
+
+    def _h_remove_generator(self, identity: str, payload: dict) -> dict:
+        gid = payload["generatorid"]
+        entry = self.db.kv_get(GENERATORS_TABLE, gid)
+        if entry is None:
+            raise NotFoundError("generator not found")
+        self.server._require_member(identity, entry["colonyname"])
+        self.db.kv_del(GENERATORS_TABLE, gid)
+        self.db.kv_take_all(PACKS_TABLE, gid)
+        return {"generatorid": gid, "removed": True}
+
+    def _h_pack(self, identity: str, payload: dict) -> dict:
+        """Append-only: safe on any replica without synchronization (§3.4.4)."""
+        gid = payload["generatorid"]
+        entry = self.db.kv_get(GENERATORS_TABLE, gid)
+        if entry is None:
+            raise NotFoundError("generator not found")
+        self.server._require_member(identity, entry["colonyname"])
+        n = self.db.kv_append(
+            PACKS_TABLE, gid, {"arg": payload.get("arg"), "ts": now_ns()}
+        )
+        if entry.get("firstpack", 0) == 0:
+            entry = dict(entry)
+            entry["firstpack"] = now_ns()
+            self.db.kv_put(GENERATORS_TABLE, gid, entry)
+        return {"generatorid": gid, "pending": n}
+
+    # -- leader scan --------------------------------------------------------
+    def tick(self) -> int:
+        ts = now_ns()
+        fired = 0
+        for entry in self.db.kv_list(GENERATORS_TABLE):
+            gid = entry["generatorid"]
+            pending = self.db.kv_len(PACKS_TABLE, gid)
+            if pending == 0:
+                continue
+            timed_out = (
+                entry.get("timeout", 0) > 0
+                and entry.get("firstpack", 0) > 0
+                and ts - entry["firstpack"] > entry["timeout"] * 1e9
+            )
+            if pending >= entry["queuesize"] or timed_out:
+                self._fire(entry, ts)
+                fired += 1
+        return fired
+
+    def _fire(self, entry: dict, ts: int) -> None:
+        gid = entry["generatorid"]
+        packs = self.db.kv_take_all(PACKS_TABLE, gid)
+        if not packs:
+            return
+        args = [p["arg"] for p in packs]
+        wf = WorkflowSpec.from_dict(entry["workflow"])
+        # Packed args are delivered to the DAG roots via kwargs.
+        for s in wf.specs:
+            if not s.conditions.dependencies:
+                s.kwargs = dict(s.kwargs)
+                s.kwargs["packed_args"] = args
+        self.server.submit_workflow_processes(wf)
+        entry = dict(entry)
+        entry["firstpack"] = 0
+        entry["runs"] = entry.get("runs", 0) + 1
+        self.db.kv_put(GENERATORS_TABLE, gid, entry)
+        self.server._notify_queue()
+        self.triggered += 1

@@ -1,0 +1,115 @@
+"""HTTP transport (paper §3.3): signed JSON envelopes over POST /api.
+
+The server *hangs* assign requests (long-poll) until a process matches or
+the timer expires — each request runs in its own thread
+(ThreadingHTTPServer), so hanging one connection never blocks others.
+Executors always dial the server, never the reverse, so they can live
+behind firewalls/NATs exactly as the paper argues.
+
+Stdlib only: http.server + urllib.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import urllib.error
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from .server import ColoniesServer
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "ColoniesHTTP/1.0"
+    colonies: ColoniesServer = None  # type: ignore[assignment]
+
+    def log_message(self, fmt: str, *args) -> None:  # silence default logging
+        pass
+
+    def do_POST(self) -> None:  # noqa: N802 (stdlib naming)
+        if self.path.rstrip("/") != "/api":
+            self.send_error(404)
+            return
+        try:
+            length = int(self.headers.get("Content-Length", "0"))
+            envelope = json.loads(self.rfile.read(length) or b"{}")
+        except (ValueError, json.JSONDecodeError):
+            self._reply(400, {"error": "malformed request", "status": 400})
+            return
+        resp = self.colonies.handle(envelope)  # may hang (long-poll assign)
+        status = int(resp.get("status", 200)) if "error" in resp else 200
+        self._reply(status, resp)
+
+    def do_GET(self) -> None:  # noqa: N802
+        if self.path.rstrip("/") == "/health":
+            self._reply(200, {"status": "ok", "server": self.colonies.name})
+        else:
+            self.send_error(404)
+
+    def _reply(self, status: int, body: dict) -> None:
+        data = json.dumps(body).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+
+class ColoniesHttpServer:
+    """Serve one ColoniesServer replica over HTTP."""
+
+    def __init__(self, colonies: ColoniesServer, host: str = "127.0.0.1", port: int = 0):
+        handler = type("BoundHandler", (_Handler,), {"colonies": colonies})
+        self.httpd = ThreadingHTTPServer((host, port), handler)
+        self.host, self.port = self.httpd.server_address[:2]
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self.httpd.serve_forever, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=2)
+
+
+class HttpTransport:
+    """Client side; compatible with client.Colonies. Retries replicas on 421."""
+
+    def __init__(self, host: str, port: int, fallbacks: list[tuple[str, int]] | None = None):
+        self.endpoints = [(host, port)] + list(fallbacks or [])
+        self._preferred = 0
+
+    def send(self, envelope: dict, timeout: float = 90.0) -> dict:
+        data = json.dumps(envelope).encode()
+        last: dict = {"error": "no endpoints", "status": 500}
+        order = list(range(len(self.endpoints)))
+        order = order[self._preferred :] + order[: self._preferred]
+        for idx in order:
+            host, port = self.endpoints[idx]
+            req = urllib.request.Request(
+                f"http://{host}:{port}/api",
+                data=data,
+                headers={"Content-Type": "application/json"},
+                method="POST",
+            )
+            try:
+                with urllib.request.urlopen(req, timeout=timeout) as resp:
+                    body = json.loads(resp.read())
+            except urllib.error.HTTPError as e:
+                try:
+                    body = json.loads(e.read())
+                except (ValueError, json.JSONDecodeError):
+                    body = {"error": str(e), "status": e.code}
+            except (urllib.error.URLError, TimeoutError, ConnectionError) as e:
+                last = {"error": f"transport: {e}", "status": 503}
+                continue
+            if body.get("status") == 421:  # follower — try next replica
+                last = body
+                continue
+            self._preferred = idx
+            return body
+        return last

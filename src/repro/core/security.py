@@ -1,0 +1,47 @@
+"""Zero-trust request envelopes (paper §3.4.6).
+
+Every API request is a signed envelope::
+
+    {"payloadtype": "submitfunctionspec", "payload": "<json>", "signature": "<hex>"}
+
+The server recovers the signer identity from (payloadtype || payload,
+signature) — *never trust, always verify* — and authorizes against the
+three-role model: server owner, colony owner, executor/user member.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any
+
+from .crypto import Crypto
+from .errors import AuthError
+
+
+def canonical(payload: dict) -> str:
+    return json.dumps(payload, sort_keys=True, separators=(",", ":"))
+
+
+def sign_envelope(payloadtype: str, payload: dict, prvkey: str) -> dict:
+    body = canonical(payload)
+    sig = Crypto.sign(payloadtype + body, prvkey)
+    return {"payloadtype": payloadtype, "payload": body, "signature": sig}
+
+
+def open_envelope(env: dict, verify: bool = True) -> tuple[str, str, dict[str, Any]]:
+    """Returns (identity, payloadtype, payload). Raises AuthError on tamper."""
+    ptype = env.get("payloadtype", "")
+    body = env.get("payload", "")
+    if isinstance(body, dict):  # allow pre-parsed payloads on the in-proc path
+        body = canonical(body)
+    payload = json.loads(body) if body else {}
+    if not verify:
+        return env.get("identity", "unverified"), ptype, payload
+    sig = env.get("signature", "")
+    if not sig:
+        raise AuthError("missing signature")
+    try:
+        identity = Crypto.recover(ptype + body, sig)
+    except (ValueError, AssertionError) as e:
+        raise AuthError(f"signature recovery failed: {e}") from e
+    return identity, ptype, payload

@@ -1,0 +1,503 @@
+"""The Colonies server — stateless broker at the heart of ColonyOS (paper §3).
+
+Every request alters or reads database state; no session data lives in
+memory between requests (§3.4.3), so any replica can serve any request —
+except ``assign``, the single synchronized operation (§3.4.1), which in
+HA deployments is serialized through the Raft leader (see cluster.py).
+
+Responsibilities implemented here:
+  * process submission / assignment / close (Tables 1–2, Fig. 2)
+  * the Eq. (1) priority queue via the database backends
+  * the ``maxexectime``/``maxwaittime`` stateless failsafe scanner (§3.4)
+  * workflow DAGs with ``wait_for_parents`` + dynamic children (§3.4.2)
+  * zero-trust authorization of every envelope (§3.4.6)
+
+Cron, generators and CFS are separate modules wired in by this server.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+from .database import Database, MemoryDatabase
+from .errors import (
+    AuthError,
+    ColoniesError,
+    ConflictError,
+    NotFoundError,
+    NotLeaderError,
+    TimeoutError_,
+    ValidationError,
+)
+from .process import (
+    FAILED,
+    RUNNING,
+    SUCCESSFUL,
+    WAITING,
+    Colony,
+    Executor,
+    Process,
+    now_ns,
+)
+from .security import open_envelope
+from .spec import FunctionSpec, WorkflowSpec
+
+USERS_TABLE = "users"
+
+
+class ColoniesServer:
+    """A single Colonies server replica.
+
+    ``serverid`` is the identity of the server owner (SHA3 of their public
+    key); only that identity may create colonies. In HA mode, ``is_leader``
+    and ``propose_assign`` are overridden by the cluster layer.
+    """
+
+    def __init__(
+        self,
+        serverid: str,
+        db: Database | None = None,
+        verify_signatures: bool = True,
+        name: str = "colonies-0",
+    ) -> None:
+        self.name = name
+        self.serverid = serverid
+        self.db = db if db is not None else MemoryDatabase()
+        self.verify_signatures = verify_signatures
+        # The one synchronized critical section (paper §3.4.1).
+        self._assign_lock = threading.Lock()
+        self._queue_cv = threading.Condition()
+        self._handlers: dict[str, Callable[[str, dict], Any]] = {
+            "addcolony": self._h_add_colony,
+            "addexecutor": self._h_add_executor,
+            "approveexecutor": self._h_approve_executor,
+            "rejectexecutor": self._h_reject_executor,
+            "removeexecutor": self._h_remove_executor,
+            "listexecutors": self._h_list_executors,
+            "adduser": self._h_add_user,
+            "addfunction": self._h_add_function,
+            "listfunctions": self._h_list_functions,
+            "submitfunctionspec": self._h_submit,
+            "submitworkflow": self._h_submit_workflow,
+            "assign": self._h_assign,
+            "close": self._h_close,
+            "addchild": self._h_add_child,
+            "getprocess": self._h_get_process,
+            "getprocesses": self._h_get_processes,
+            "colonystats": self._h_stats,
+        }
+        # Extension points (cron/generator/fs register their handlers here).
+        self.extensions: list[Any] = []
+        # HA hooks — standalone servers are always leader.
+        self._is_leader: Callable[[], bool] = lambda: True
+        self._propose_assign: Callable[[dict], None] | None = None
+        self._stop = threading.Event()
+        self._failsafe_thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ RPC
+    def handle(self, envelope: dict) -> dict:
+        """Entry point for all transports. Returns {"error":...} or {"result":...}."""
+        try:
+            identity, ptype, payload = open_envelope(
+                envelope, verify=self.verify_signatures
+            )
+            handler = self._handlers.get(ptype)
+            if handler is None:
+                for ext in self.extensions:
+                    handler = ext.handlers().get(ptype)
+                    if handler is not None:
+                        break
+            if handler is None:
+                raise ValidationError(f"unknown payloadtype {ptype!r}")
+            result = handler(identity, payload)
+            return {"result": result}
+        except NotLeaderError as e:
+            return {"error": str(e), "status": e.status, "leader": e.leader}
+        except ColoniesError as e:
+            return {"error": str(e), "status": e.status}
+
+    # ------------------------------------------------------------ auth utils
+    def _require_server_owner(self, identity: str) -> None:
+        if identity != self.serverid:
+            raise AuthError("requires server owner")
+
+    def _require_colony_owner(self, identity: str, colonyname: str) -> Colony:
+        colony = self.db.get_colony(colonyname)
+        if identity != colony.colonyid:
+            raise AuthError("requires colony owner")
+        return colony
+
+    def _require_member(self, identity: str, colonyname: str) -> Executor | None:
+        """Approved executor OR registered user OR colony owner."""
+        colony = self.db.get_colony(colonyname)
+        if identity == colony.colonyid:
+            return None
+        try:
+            ex = self.db.get_executor(identity)
+            if ex.colonyname == colonyname and ex.state == "approved":
+                self.db.touch_executor(identity, now_ns())
+                return ex
+        except NotFoundError:
+            pass
+        user = self.db.kv_get(USERS_TABLE, identity)
+        if user is not None and user.get("colonyname") == colonyname:
+            return None
+        raise AuthError("identity is not a member of the colony")
+
+    def _require_executor(self, identity: str, colonyname: str) -> Executor:
+        try:
+            ex = self.db.get_executor(identity)
+        except NotFoundError as e:
+            raise AuthError("unknown executor identity") from e
+        if ex.colonyname != colonyname:
+            raise AuthError("executor belongs to another colony")
+        if ex.state != "approved":
+            raise AuthError(f"executor not approved (state={ex.state})")
+        self.db.touch_executor(identity, now_ns())
+        return ex
+
+    # -------------------------------------------------------------- handlers
+    def _h_add_colony(self, identity: str, payload: dict) -> dict:
+        self._require_server_owner(identity)
+        colony = Colony.from_dict(payload.get("colony", payload))
+        if not colony.colonyname or not colony.colonyid:
+            raise ValidationError("colony needs colonyname and colonyid")
+        self.db.add_colony(colony)
+        return colony.to_dict()
+
+    def _h_add_executor(self, identity: str, payload: dict) -> dict:
+        ex = Executor.from_dict(payload.get("executor", payload))
+        self._require_colony_owner(identity, ex.colonyname)
+        if not ex.executorid or not ex.executortype:
+            raise ValidationError("executor needs executorid and executortype")
+        ex.state = "pending"
+        ex.commissiontime_ns = now_ns()
+        self.db.add_executor(ex)
+        return ex.to_dict()
+
+    def _h_approve_executor(self, identity: str, payload: dict) -> dict:
+        ex = self.db.get_executor(payload["executorid"])
+        self._require_colony_owner(identity, ex.colonyname)
+        self.db.set_executor_state(ex.executorid, "approved")
+        return {"executorid": ex.executorid, "state": "approved"}
+
+    def _h_reject_executor(self, identity: str, payload: dict) -> dict:
+        ex = self.db.get_executor(payload["executorid"])
+        self._require_colony_owner(identity, ex.colonyname)
+        self.db.set_executor_state(ex.executorid, "rejected")
+        return {"executorid": ex.executorid, "state": "rejected"}
+
+    def _h_remove_executor(self, identity: str, payload: dict) -> dict:
+        ex = self.db.get_executor(payload["executorid"])
+        self._require_colony_owner(identity, ex.colonyname)
+        self.db.remove_executor(ex.executorid)
+        return {"executorid": ex.executorid, "removed": True}
+
+    def _h_list_executors(self, identity: str, payload: dict) -> list[dict]:
+        colony = payload["colonyname"]
+        self._require_member(identity, colony)
+        return [e.to_dict() for e in self.db.list_executors(colony)]
+
+    def _h_add_user(self, identity: str, payload: dict) -> dict:
+        colony = payload["colonyname"]
+        self._require_colony_owner(identity, colony)
+        user = {
+            "userid": payload["userid"],
+            "username": payload.get("username", ""),
+            "colonyname": colony,
+        }
+        self.db.kv_put(USERS_TABLE, payload["userid"], user)
+        return user
+
+    def _h_add_function(self, identity: str, payload: dict) -> dict:
+        colony = payload["colonyname"]
+        ex = self._require_executor(identity, colony)
+        self.db.add_function(ex.executorid, colony, payload["funcname"])
+        return {"executorid": ex.executorid, "funcname": payload["funcname"]}
+
+    def _h_list_functions(self, identity: str, payload: dict) -> list[dict]:
+        colony = payload["colonyname"]
+        self._require_member(identity, colony)
+        return self.db.list_functions(colony, payload.get("executorid"))
+
+    # -- submit -------------------------------------------------------------
+    def _h_submit(self, identity: str, payload: dict) -> dict:
+        spec = FunctionSpec.from_dict(payload.get("spec", payload))
+        if not spec.conditions.colonyname:
+            raise ValidationError("spec.conditions.colonyname required")
+        if not spec.conditions.executortype:
+            raise ValidationError("spec.conditions.executortype required")
+        self._require_member(identity, spec.conditions.colonyname)
+        p = Process.create(spec)
+        self.db.add_process(p)
+        self._notify_queue()
+        return p.to_dict()
+
+    def _h_submit_workflow(self, identity: str, payload: dict) -> dict:
+        wf = WorkflowSpec.from_dict(payload.get("workflow", payload))
+        colony = wf.colonyname or (
+            wf.specs[0].conditions.colonyname if wf.specs else ""
+        )
+        if not colony:
+            raise ValidationError("workflow needs a colonyname")
+        self._require_member(identity, colony)
+        if not wf.specs:
+            raise ValidationError("empty workflow")
+        for s in wf.specs:
+            s.conditions.colonyname = s.conditions.colonyname or colony
+        wf.validate()
+        procs = self.submit_workflow_processes(wf)
+        self._notify_queue()
+        return {
+            "workflowid": procs[0].workflowid,
+            "processes": [p.to_dict() for p in procs],
+        }
+
+    def submit_workflow_processes(self, wf: WorkflowSpec) -> list[Process]:
+        """DAG expansion (paper §3.4.2): one process per node, linked by ids."""
+        from .workflow import expand_workflow
+
+        procs = expand_workflow(wf)
+        for p in procs:
+            self.db.add_process(p)
+        return procs
+
+    # -- assign ---------------------------------------------------------------
+    def _h_assign(self, identity: str, payload: dict) -> dict:
+        colony = payload["colonyname"]
+        timeout = float(payload.get("timeout", 10.0))
+        ex = self._require_executor(identity, colony)
+        p = self.assign(colony, ex, timeout)
+        if p is None:
+            raise TimeoutError_("no process assigned within timeout")
+        return p.to_dict()
+
+    def assign(self, colony: str, ex: Executor, timeout: float) -> Process | None:
+        """Long-poll assignment (paper §3.3: the server *hangs* the request)."""
+        deadline = now_ns() + int(timeout * 1e9)
+        while not self._stop.is_set():
+            if not self._is_leader():
+                raise NotLeaderError("assign must be served by the leader")
+            p = self._try_assign_once(colony, ex)
+            if p is not None:
+                return p
+            remaining = (deadline - now_ns()) / 1e9
+            if remaining <= 0:
+                return None
+            with self._queue_cv:
+                self._queue_cv.wait(timeout=min(remaining, 0.5))
+        return None
+
+    def _try_assign_once(self, colony: str, ex: Executor) -> Process | None:
+        with self._assign_lock:
+            cands = self.db.candidates(colony, ex.executortype, ex.executorname)
+            for p in cands:
+                op = {
+                    "op": "assign",
+                    "processid": p.processid,
+                    "executorid": ex.executorid,
+                    "ts": now_ns(),
+                }
+                if self._propose_assign is not None:
+                    # HA path: serialize through the Raft log before applying.
+                    self._propose_assign(op)
+                else:
+                    self.apply_assign(op)
+                return self.db.get_process(p.processid)
+        return None
+
+    def apply_assign(self, op: dict) -> None:
+        """State-machine apply for an assign op (also invoked by Raft commit)."""
+        p = self.db.get_process(op["processid"])
+        if p.state != WAITING:
+            raise ConflictError("process no longer waiting")
+        ts = op["ts"]
+        p.state = RUNNING
+        p.isassigned = True
+        p.assignedexecutorid = op["executorid"]
+        p.starttime_ns = ts
+        if p.spec.maxexectime and p.spec.maxexectime > 0:
+            p.deadline_ns = ts + p.spec.maxexectime * 10**9
+        else:
+            p.deadline_ns = 0
+        # Dataflow (Table 4): inputs = concatenated parent outputs.
+        if p.parents:
+            inputs: list[Any] = []
+            for parent_id in p.parents:
+                parent = self.db.get_process(parent_id)
+                inputs.extend(parent.output)
+            p.inputs = inputs
+        self.db.update_process(p)
+
+    # -- close ---------------------------------------------------------------
+    def _h_close(self, identity: str, payload: dict) -> dict:
+        pid = payload["processid"]
+        p = self.db.get_process(pid)
+        ex = self._require_executor(identity, p.colonyname)
+        if p.assignedexecutorid != ex.executorid or p.state != RUNNING:
+            # e.g. the failsafe already reset this process (paper §4.1:
+            # "The previous executor then receives an error").
+            raise ConflictError("process is not assigned to this executor")
+        succeeded = bool(payload.get("successful", True))
+        output = payload.get("out", [])
+        errors = payload.get("errors", [])
+        self.close_process(p, succeeded, output, errors)
+        return self.db.get_process(pid).to_dict()
+
+    def close_process(
+        self, p: Process, succeeded: bool, output: list[Any], errors: list[str]
+    ) -> None:
+        """Close + stateless DAG propagation (paper §3.4.2).
+
+        No synchronization needed: exactly one executor owns the process.
+        """
+        p.state = SUCCESSFUL if succeeded else FAILED
+        p.endtime_ns = now_ns()
+        p.output = list(output)
+        p.errors = list(errors)
+        p.deadline_ns = 0
+        self.db.update_process(p)
+        if succeeded:
+            for child_id in p.children:
+                self._maybe_release_child(child_id)
+        else:
+            # Fail descendants so workflows terminate instead of hanging.
+            self._fail_descendants(p, f"parent process {p.processid} failed")
+        self._notify_queue()
+
+    def _maybe_release_child(self, child_id: str) -> None:
+        child = self.db.get_process(child_id)
+        if not child.wait_for_parents:
+            return
+        for parent_id in child.parents:
+            if self.db.get_process(parent_id).state != SUCCESSFUL:
+                return
+        child.wait_for_parents = False
+        self.db.update_process(child)
+        if hasattr(self.db, "requeue"):
+            self.db.requeue(child)
+
+    def _fail_descendants(self, p: Process, reason: str) -> None:
+        for child_id in p.children:
+            child = self.db.get_process(child_id)
+            if child.state in (WAITING, RUNNING):
+                child.state = FAILED
+                child.endtime_ns = now_ns()
+                child.errors = [reason]
+                self.db.update_process(child)
+                self._fail_descendants(child, reason)
+
+    # -- dynamic children (MapReduce on the fly, paper §3.4.2) ----------------
+    def _h_add_child(self, identity: str, payload: dict) -> dict:
+        parent_id = payload["processid"]
+        parent = self.db.get_process(parent_id)
+        ex = self._require_executor(identity, parent.colonyname)
+        if parent.assignedexecutorid != ex.executorid or parent.state != RUNNING:
+            raise AuthError("only the assigned executor may extend the DAG")
+        spec = FunctionSpec.from_dict(payload["spec"])
+        spec.conditions.colonyname = parent.colonyname
+        child = Process.create(spec)
+        child.workflowid = parent.workflowid
+        insert_after_parent = bool(payload.get("waitforparent", False))
+        if insert_after_parent:
+            child.parents = [parent_id]
+            child.wait_for_parents = True
+        self.db.add_process(child)
+        parent.children = parent.children + [child.processid]
+        self.db.update_process(parent)
+        self._notify_queue()
+        return child.to_dict()
+
+    # -- introspection ---------------------------------------------------------
+    def _h_get_process(self, identity: str, payload: dict) -> dict:
+        p = self.db.get_process(payload["processid"])
+        self._require_member(identity, p.colonyname)
+        return p.to_dict()
+
+    def _h_get_processes(self, identity: str, payload: dict) -> list[dict]:
+        colony = payload["colonyname"]
+        self._require_member(identity, colony)
+        return [
+            p.to_dict()
+            for p in self.db.list_processes(
+                colony, payload.get("state"), int(payload.get("count", 100))
+            )
+        ]
+
+    def _h_stats(self, identity: str, payload: dict) -> dict:
+        colony = payload["colonyname"]
+        self._require_member(identity, colony)
+        stats = {s: 0 for s in (WAITING, RUNNING, SUCCESSFUL, FAILED)}
+        for p in self.db.list_processes(colony, count=10**9):
+            stats[p.state] += 1
+        stats["executors"] = len(self.db.list_executors(colony))
+        return stats
+
+    # -- failsafe (paper §3.4) --------------------------------------------------
+    def failsafe_scan(self) -> dict:
+        """One stateless scan pass; returns counters (also used by tests)."""
+        ts = now_ns()
+        reset = failed = expired = 0
+        for p in self.db.running_past_deadline(ts):
+            if p.retries + 1 > max(p.spec.maxretries, 0):
+                p.state = FAILED
+                p.endtime_ns = ts
+                p.errors = p.errors + ["maxretries exceeded after maxexectime reset"]
+                self.db.update_process(p)
+                self._fail_descendants(p, f"parent process {p.processid} failed")
+                failed += 1
+            else:
+                # Reset back to the queue — another executor will pick it up.
+                p.state = WAITING
+                p.isassigned = False
+                p.assignedexecutorid = ""
+                p.starttime_ns = 0
+                p.deadline_ns = 0
+                p.retries += 1
+                self.db.update_process(p)
+                if hasattr(self.db, "requeue"):
+                    self.db.requeue(p)
+                reset += 1
+        for p in self.db.waiting_past_deadline(ts):
+            p.state = FAILED
+            p.endtime_ns = ts
+            p.errors = p.errors + ["maxwaittime exceeded"]
+            self.db.update_process(p)
+            self._fail_descendants(p, f"parent process {p.processid} failed")
+            expired += 1
+        if reset:
+            self._notify_queue()
+        return {"reset": reset, "failed": failed, "waitexpired": expired}
+
+    def start_background(self, failsafe_interval: float = 0.25) -> None:
+        """Start the periodic failsafe scanner (leader-gated in HA mode)."""
+
+        def loop() -> None:
+            while not self._stop.wait(failsafe_interval):
+                if self._is_leader():
+                    self.failsafe_scan()
+                for ext in self.extensions:
+                    tick = getattr(ext, "tick", None)
+                    if tick is not None and self._is_leader():
+                        tick()
+
+        self._failsafe_thread = threading.Thread(target=loop, daemon=True)
+        self._failsafe_thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._notify_queue()
+        if self._failsafe_thread is not None:
+            self._failsafe_thread.join(timeout=2)
+
+    def _notify_queue(self) -> None:
+        with self._queue_cv:
+            self._queue_cv.notify_all()
+
+    # -- HA wiring ----------------------------------------------------------------
+    def set_leader_check(self, fn: Callable[[], bool]) -> None:
+        self._is_leader = fn
+
+    def set_assign_proposer(self, fn: Callable[[dict], None]) -> None:
+        self._propose_assign = fn

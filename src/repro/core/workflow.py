@@ -1,0 +1,48 @@
+"""Workflow DAG expansion (paper §3.4.2, Tables 3–4, Fig. 4).
+
+A workflow is *stateless*: submission expands every node into an ordinary
+process-table row; ordering is enforced purely by the ``wait_for_parents``
+flag which the ``close`` handler clears when all parents have finished.
+"""
+
+from __future__ import annotations
+
+import secrets
+
+from .process import Process
+from .spec import WorkflowSpec
+
+
+def expand_workflow(wf: WorkflowSpec) -> list[Process]:
+    """One process per node; parent/child ids wired from nodename deps."""
+    workflowid = secrets.token_hex(16)
+    by_name: dict[str, Process] = {}
+    procs: list[Process] = []
+    ts_base = None
+    for spec in wf.specs:
+        p = Process.create(spec)
+        if ts_base is None:
+            ts_base = p.submissiontime_ns
+        p.workflowid = workflowid
+        by_name[spec.nodename] = p
+        procs.append(p)
+    for spec in wf.specs:
+        p = by_name[spec.nodename]
+        for dep in spec.conditions.dependencies:
+            parent = by_name[dep]
+            p.parents.append(parent.processid)
+            parent.children.append(p.processid)
+        p.wait_for_parents = len(p.parents) > 0
+    return procs
+
+
+def workflow_state(procs: list[Process]) -> str:
+    """Aggregate state of a workflow's processes."""
+    states = {p.state for p in procs}
+    if "failed" in states:
+        return "failed"
+    if states == {"successful"}:
+        return "successful"
+    if "running" in states:
+        return "running"
+    return "waiting"

@@ -1,0 +1,107 @@
+"""Deterministic synthetic data pipeline with background prefetch.
+
+Stands in for a tokenized corpus: batches are generated from a counter-
+keyed PRNG, so every (step, shard) is reproducible across restarts —
+which the failsafe/restart integration tests rely on. A background
+thread keeps a small prefetch queue full, overlapping host-side batch
+synthesis with device compute (the same structure a real corpus loader
+would have).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+class SyntheticTokens:
+    """Markov-ish synthetic token stream (not uniform noise: CE can drop)."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq_len: int, seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq_len = seq_len
+        self.seed = seed
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng(self.seed * 1_000_003 + step)
+        v = self.cfg.vocab_size
+        b, s = self.batch, self.seq_len
+        # structured stream: tok_{t+1} = (a*tok_t + c + noise) % V — learnable
+        a = 31
+        toks = np.empty((b, s), np.int32)
+        toks[:, 0] = rng.integers(0, v, b)
+        noise = (rng.random((b, s)) < 0.1) * rng.integers(1, v, (b, s))
+        for t in range(1, s):
+            toks[:, t] = (a * toks[:, t - 1] + 7 + noise[:, t]) % v
+        out = {"tokens": toks}
+        if self.cfg.cross_attn_every > 0:
+            out["image_embeds"] = rng.standard_normal(
+                (b, self.cfg.num_patches, self.cfg.vision_embed_dim), np.float32
+            ).astype(np.dtype(self.cfg.compute_dtype))
+        if self.cfg.is_encdec:
+            src = min(self.cfg.max_src_len, s)
+            out["src_frames"] = rng.standard_normal(
+                (b, src, self.cfg.audio_embed_dim), np.float32
+            ).astype(np.dtype(self.cfg.compute_dtype))
+        return out
+
+
+class Prefetcher:
+    """Background-thread prefetch queue over a step-indexed source."""
+
+    def __init__(self, source: SyntheticTokens, start_step: int = 0, depth: int = 2):
+        self.source = source
+        self.queue: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self) -> None:
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.source.batch_at(step)
+            while not self._stop.is_set():
+                try:
+                    self.queue.put((step, batch), timeout=0.2)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        while not self._stop.is_set():
+            yield self.queue.get()
+
+    def next(self) -> tuple[int, dict]:
+        return self.queue.get()
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self.queue.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def device_put_batch(batch: dict, mesh=None, rules=None) -> dict:
+    """Host batch -> device arrays, sharded batch-dim over (pod, data)."""
+    if mesh is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    out = {}
+    for k, v in batch.items():
+        spec = P(axes if axes else None)
+        out[k] = jax.device_put(jnp.asarray(v), NamedSharding(mesh, spec))
+    return out

@@ -1,0 +1,125 @@
+"""Flash attention Pallas TPU kernel (GQA + causal + sliding window).
+
+TPU adaptation of the standard flash algorithm: the (q_block, kv_block)
+score tile lives only in VMEM; online-softmax running max/denominator are
+VMEM scratch carried across the kv grid dimension (TPU grid iterations
+execute sequentially, minor-most last). HBM traffic is exactly Q, K, V,
+O — the score matrix never round-trips, which is what moves the
+attention-heavy cells from memory-bound toward compute-bound (§Perf).
+
+Layout decisions for the MXU/VPU:
+  * block_q x head_dim and block_k x head_dim tiles are (128x128)-aligned
+    by default (MXU native).
+  * running m/l are (block_q, 128) f32 — lane-replicated, VPU-friendly.
+  * GQA maps query head h to kv head h // group via the K/V index_map, so
+    grouped heads re-read the same KV tile from HBM only once per group
+    when the pipeline caches the block.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int,
+    block_q: int, block_k: int, nk: int,
+):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (Bq, D)
+    k = k_ref[0].astype(jnp.float32)  # (Bk, D)
+    v = v_ref[0].astype(jnp.float32)  # (Bk, Dv)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (Bq, Bk)
+
+    iq = pl.program_id(1)
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (Bq, 128) lane-replicated
+    l_prev = l_scr[...]
+    m_blk = jnp.max(s, axis=1, keepdims=True)  # (Bq, 1)
+    m_cur = jnp.maximum(m_prev, jnp.broadcast_to(m_blk, m_prev.shape))
+    correction = jnp.exp(m_prev - m_cur)  # (Bq, 128)
+    p = jnp.exp(s - m_cur[:, :1])  # (Bq, Bk)
+    p = jnp.where(mask, p, 0.0)
+    l_cur = l_prev * correction + jnp.broadcast_to(
+        jnp.sum(p, axis=1, keepdims=True), l_prev.shape
+    )
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Bq, Dv)
+    acc_scr[...] = acc_scr[...] * correction[:, : acc_scr.shape[-1]][:, :1] + pv
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...][:, :1], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jnp.ndarray,  # (BH, S, D)
+    k: jnp.ndarray,  # (BKV, S, D)
+    v: jnp.ndarray,  # (BKV, S, D)
+    *,
+    group: int,  # q heads per kv head
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, s, d = q.shape
+    scale = d ** -0.5
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running max m
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

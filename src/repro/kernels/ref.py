@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every kernel — deliberately naive/sequential so
+correctness is obvious; tests assert_allclose kernels against these."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, S, KV, D)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) * d**-0.5
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def rwkv6_ref(
+    r: jnp.ndarray,  # (B, T, H, K) fp32
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # (B, T, H, V)
+    logw: jnp.ndarray,  # (B, T, H, K)
+    u: jnp.ndarray,  # (H, K)
+    s0: jnp.ndarray,  # (B, H, K, V)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-by-token recurrence:
+    out_t = r_t (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T.
+    """
+
+    def step(s, inp):
+        rt, kt, vt, lwt = inp  # (B, H, K/V)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = jnp.exp(lwt)[..., None] * s + kv
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, logw))
+    s_final, out = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(out, 0, 1), s_final
+
+
+def mamba_scan_ref(
+    dt: jnp.ndarray,  # (B, T, DI) fp32
+    bmat: jnp.ndarray,  # (B, T, N)
+    cmat: jnp.ndarray,  # (B, T, N)
+    a: jnp.ndarray,  # (DI, N)
+    x: jnp.ndarray,  # (B, T, DI)
+    h0: jnp.ndarray,  # (B, DI, N)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;  y_t = C_t · h_t."""
+
+    def step(h, inp):
+        dtt, xt, bt, ct = inp
+        da = jnp.exp(dtt[:, :, None] * a[None])  # (B, DI, N)
+        h = da * h + (dtt * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (dt, x, bmat, cmat))
+    h_final, y = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(y, 0, 1), h_final

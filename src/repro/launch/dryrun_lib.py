@@ -1,0 +1,247 @@
+"""Dry-run core: lower + compile every (arch x shape x mesh) cell.
+
+Import-order contract: the caller (dryrun.py) sets XLA_FLAGS *before*
+importing jax/this module. Functions here are device-count agnostic so
+tests can run them on small host-device meshes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs import SHAPES, TrainConfig, get_config
+from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.shapes import CellSkip, batch_specs, cell_skip_reason, decode_specs
+from ..models.model import model_spec
+from ..models.sharding import abstract_params, param_pspecs, rules_for
+from ..serve.engine import make_prefill, make_serve_step
+from ..train.train_step import init_state, make_train_step
+from . import hlo_analysis
+from .roofline import Roofline, model_flops
+from .sharding_plan import (
+    batch_pspecs,
+    decode_in_pspecs,
+    state_pspecs,
+    to_shardings,
+)
+
+
+def _metrics_pspecs(cfg: ModelConfig) -> dict:
+    from ..train.train_step import _metric_keys
+
+    keys = _metric_keys(cfg) + ["grad_norm", "lr"]
+    return {k: P() for k in keys}
+
+
+def _abstract_state(cfg: ModelConfig, tcfg: TrainConfig):
+    spec = model_spec(cfg)
+    params_abs = abstract_params(spec, jnp.dtype(cfg.param_dtype))
+    return jax.eval_shape(lambda p: init_state(p, tcfg), params_abs)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, tcfg: TrainConfig | None = None):
+    """Build + lower the right step function for this cell. Returns lowered."""
+    from ..models.sharding import activation_mesh
+
+    with activation_mesh(mesh):
+        return _lower_cell(cfg, shape, mesh, tcfg)
+
+
+def _lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, tcfg: TrainConfig | None = None):
+    tcfg = tcfg or TrainConfig()
+    spec = model_spec(cfg)
+    if shape.kind == "train":
+        from .sharding_plan import microbatch_specs
+
+        state_abs = _abstract_state(cfg, tcfg)
+        batch_abs = batch_specs(cfg, shape)
+        bdim = 0
+        if tcfg.microbatches > 1:
+            batch_abs = microbatch_specs(batch_abs, tcfg.microbatches)
+            bdim = 1
+        state_sh = to_shardings(state_pspecs(cfg, spec, mesh, tcfg), mesh)
+        batch_sh = to_shardings(batch_pspecs(cfg, batch_abs, mesh, batch_dim=bdim), mesh)
+        fn = jax.jit(
+            make_train_step(cfg, tcfg),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, to_shardings(_metrics_pspecs(cfg), mesh)),
+            donate_argnums=(0,),
+        )
+        with mesh:
+            return fn.lower(state_abs, batch_abs)
+    params_abs = abstract_params(spec, jnp.dtype(cfg.param_dtype))
+    params_sh = to_shardings(param_pspecs(spec, rules_for(cfg), mesh), mesh)
+    if shape.kind == "prefill":
+        batch_abs = batch_specs(cfg, shape)
+        batch_sh = to_shardings(batch_pspecs(cfg, batch_abs, mesh), mesh)
+        fn = jax.jit(make_prefill(cfg), in_shardings=(params_sh, batch_sh))
+        with mesh:
+            return fn.lower(params_abs, batch_abs)
+    # decode
+    specs = decode_specs(cfg, shape)
+    in_ps = decode_in_pspecs(cfg, specs, mesh)
+    fn = jax.jit(
+        make_serve_step(cfg),
+        in_shardings=(
+            params_sh,
+            to_shardings(in_ps["tokens"], mesh),
+            to_shardings(in_ps["cache"], mesh),
+            to_shardings(in_ps["pos"], mesh),
+        ),
+        donate_argnums=(2,),
+    )
+    with mesh:
+        return fn.lower(params_abs, specs["tokens"], specs["cache"], specs["pos"])
+
+
+def analyze_compiled(compiled, cfg: ModelConfig, shape: ShapeConfig, chips: int) -> dict:
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = dict(ca)
+    except Exception as e:  # noqa: BLE001
+        cost = {"error": str(e)}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            if hasattr(ma, attr):
+                mem[attr] = getattr(ma, attr)
+    except Exception as e:  # noqa: BLE001
+        mem = {"error": str(e)}
+    text = compiled.as_text()
+    hlo = hlo_analysis.analyze_hlo(text)
+    roof = Roofline(
+        flops_per_device=hlo["dot_flops"],
+        bytes_per_device=hlo["hbm_bytes_fused"],
+        collective_bytes_per_device=hlo["collectives"]["total_bytes"],
+        chips=chips,
+        model_flops_total=model_flops(cfg, shape),
+        bytes_per_device_pessimistic=hlo["hbm_bytes"],
+    )
+    return {
+        # XLA's own (loop-unaware) numbers kept for reference
+        "cost_analysis": {k: v for k, v in cost.items() if isinstance(v, (int, float))},
+        "memory_analysis": mem,
+        "collectives": hlo["collectives"],
+        "loop_trip_counts": hlo["loop_trip_counts"],
+        "dot_count": hlo["dot_count"],
+        "roofline": roof.to_dict(),
+        "hlo_bytes": len(text),
+    }
+
+
+_BIG_ARCHS = {"jamba-1.5-large-398b", "deepseek-v3-671b"}  # adafactor state
+
+
+def default_tcfg(arch: str, shape: ShapeConfig) -> TrainConfig:
+    """Per-cell training policy used by the baseline dry-run sweep:
+    8 microbatches for train_4k (fits activations in 16 GB HBM),
+    Adafactor for the >=100B configs (factored optimizer state)."""
+    return TrainConfig(
+        microbatches=8 if shape.kind == "train" else 1,
+        optimizer="adafactor" if arch in _BIG_ARCHS else "adamw",
+    )
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    variant: str = "full",
+    tcfg: TrainConfig | None = None,
+    cfg_overrides: dict | None = None,
+) -> dict:
+    """Lower+compile one cell; returns the result record (never raises)."""
+    shape = SHAPES[shape_name]
+    if tcfg is None:
+        tcfg = default_tcfg(arch, shape)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    record: dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": dict(mesh.shape),
+        "chips": chips,
+        "variant": variant,
+    }
+    cfg = get_config(arch, variant)
+    if cfg_overrides:
+        cfg = cfg.copy(**cfg_overrides)
+    reason = cell_skip_reason(cfg, shape)
+    if reason:
+        record["status"] = "skipped"
+        record["reason"] = reason
+        return record
+    try:
+        t0 = time.time()
+        lowered = lower_cell(cfg, shape, mesh, tcfg)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        record.update(analyze_compiled(compiled, cfg, shape, chips))
+        record["status"] = "ok"
+        record["lower_s"] = round(t1 - t0, 2)
+        record["compile_s"] = round(t2 - t1, 2)
+        del compiled, lowered
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc(limit=20)
+    return record
+
+
+def sweep(
+    archs: list[str],
+    shapes: list[str],
+    mesh,
+    outdir: str,
+    mesh_tag: str,
+    *,
+    force: bool = False,
+    cfg_overrides: dict | None = None,
+) -> list[dict]:
+    os.makedirs(outdir, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            path = os.path.join(outdir, f"{mesh_tag}__{arch}__{shape_name}.json")
+            if os.path.exists(path) and not force:
+                with open(path) as f:
+                    results.append(json.load(f))
+                continue
+            rec = run_cell(arch, shape_name, mesh, cfg_overrides=cfg_overrides)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (
+                    f" bottleneck={r['bottleneck']}"
+                    f" frac={r['roofline_fraction']:.3f}"
+                    f" compile={rec['compile_s']}s"
+                )
+            elif status == "error":
+                extra = " " + rec["error"][:120]
+            print(f"[dryrun] {mesh_tag} {arch} {shape_name}: {status}{extra}", flush=True)
+            results.append(rec)
+    return results

@@ -1,0 +1,322 @@
+"""Loop-aware roofline accounting from compiled (post-SPMD) HLO text.
+
+XLA's ``HloCostAnalysis`` visits each computation ONCE, so anything inside
+a ``while`` (scan-over-layers, microbatch accumulation, chunked SSM scans)
+is undercounted by its trip count. This module re-derives the three
+roofline inputs from the optimized HLO text itself:
+
+  * dot FLOPs      — 2 * prod(result dims) * prod(contracting dims),
+  * HBM bytes      — Σ per-op (result + operand bytes) over top-level ops
+                     (a perfect-fusion traffic model: every producer write
+                     and consumer read counted once),
+  * collective wire bytes — per-kind conventions (all-reduce 2x, others 1x),
+
+each scaled by the product of enclosing while-loop trip counts (parsed
+from the loop condition's comparison constant). Shapes in post-SPMD HLO
+are per-device, so totals are per-device quantities.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# op definition: %name = <types> opcode(...)
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\(")
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_ZERO_COST = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    is_entry: bool = False
+    ops: dict[str, _Op] = field(default_factory=dict)
+    order: list[str] = field(default_factory=list)
+
+
+def _parse(hlo_text: str) -> tuple[dict[str, _Computation], str]:
+    comps: dict[str, _Computation] = {}
+    entry = ""
+    current: _Computation | None = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        head = _COMP_HEAD_RE.match(line.strip())
+        if head:
+            current = _Computation(head.group(2), is_entry=bool(head.group(1)))
+            comps[current.name] = current
+            if current.is_entry:
+                entry = current.name
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _DEF_RE.match(line)
+        if m:
+            op = _Op(m.group(1), m.group(2), m.group(3), line)
+            current.ops[op.name] = op
+            current.order.append(op.name)
+    return comps, entry
+
+
+def _trip_count(cond: _Computation) -> int | None:
+    """Loop condition is `param < constant` (scan): read the constant."""
+    consts = re.findall(r"constant\((\d+)\)", "\n".join(o.line for o in cond.ops.values()))
+    if consts:
+        return max(int(c) for c in consts)
+    return None
+
+
+def _operands_of(op: _Op, comp: _Computation) -> list[_Op]:
+    """Resolve operand names inside the call parens to defs in this comp."""
+    paren = op.line.find("(", op.line.find(op.opcode))
+    if paren < 0:
+        return []
+    depth = 0
+    end = paren
+    for i in range(paren, len(op.line)):
+        if op.line[i] == "(":
+            depth += 1
+        elif op.line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args = op.line[paren + 1 : end]
+    out = []
+    for name in _OPERAND_RE.findall(args):
+        other = comp.ops.get(name)
+        if other is not None and other.name != op.name:
+            out.append(other)
+    return out
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    result_elems = 1
+    for d in _shape_dims(op.type_str):
+        result_elems *= d
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contracting = 1
+    if mc:
+        idxs = [int(x) for x in mc.group(1).split(",") if x]
+        operands = _operands_of(op, comp)
+        if operands:
+            lhs_dims = _shape_dims(operands[0].type_str)
+            for i in idxs:
+                if i < len(lhs_dims):
+                    contracting *= lhs_dims[i]
+    return 2.0 * result_elems * contracting
+
+
+def _conv_flops(op: _Op, comp: _Computation) -> float:
+    # flops ~= 2 * output elems * kernel spatial * in_channels (rare here)
+    result_elems = 1
+    for d in _shape_dims(op.type_str):
+        result_elems *= d
+    operands = _operands_of(op, comp)
+    k = 1
+    if len(operands) >= 2:
+        for d in _shape_dims(operands[1].type_str):
+            k *= d
+        out_d = _shape_dims(op.type_str)
+        if out_d:
+            k = max(1, k // max(out_d[-1], 1))
+    return 2.0 * result_elems * k
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _op_label(op: _Op) -> str:
+    m = _META_RE.search(op.line)
+    if not m:
+        return op.opcode
+    parts = m.group(1).split("/")
+    tail = "/".join(parts[-2:]) if len(parts) >= 2 else parts[-1]
+    return f"{op.opcode}:{tail}"
+
+
+def analyze_hlo(hlo_text: str, breakdown_top: int = 0) -> dict:
+    comps, entry = _parse(hlo_text)
+    if not entry:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else ""
+
+    flops_total = 0.0
+    bytes_total = 0.0
+    bytes_fused = 0.0  # TPU-fusion approximation: matmul/copy/collective traffic only
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, int] = defaultdict(int)
+    trip_counts: dict[str, int] = {}
+    dot_count = 0
+    bytes_by_label: dict[str, float] = defaultdict(float)
+    flops_by_label: dict[str, float] = defaultdict(float)
+
+    seen: set[tuple[str, float]] = set()
+
+    def visit(comp_name: str, scale: float) -> None:
+        nonlocal flops_total, bytes_total, bytes_fused, dot_count
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        key = (comp_name, scale)
+        if key in seen:  # identical revisit; loops can't recurse in HLO
+            return
+        seen.add(key)
+        for op_name in comp.order:
+            op = comp.ops[op_name]
+            if op.opcode in _ZERO_COST:
+                continue
+            # bytes: result + operands (per-op HBM traffic model — pessimistic:
+            # counts every top-level op's tensors; CPU XLA fuses less than TPU)
+            b = _type_bytes(op.type_str)
+            operand_bytes = [_type_bytes(o.type_str) for o in _operands_of(op, comp)]
+            b += sum(operand_bytes)
+            # In-place update semantics: a dynamic-update-slice writes only
+            # the slice (the carried buffer aliases); a dynamic-slice reads
+            # only the slice. Remove the full-buffer double counting.
+            is_dus = op.opcode == "dynamic-update-slice" or "dynamic-update-slice" in op.name
+            is_ds = not is_dus and (op.opcode == "dynamic-slice" or "dynamic-slice" in op.name)
+            if is_dus and operand_bytes:
+                b -= 2 * max(operand_bytes)
+            elif is_ds and operand_bytes:
+                b -= max(operand_bytes)
+            b = max(b, 0)
+            bytes_total += b * scale
+            # fused model: only matmul operands/results, scan saves (dus),
+            # copies and collectives hit HBM; elementwise chains fuse away.
+            if (
+                op.opcode in ("dot", "convolution", "copy", "dynamic-update-slice", "dynamic-slice")
+                or "dynamic-update-slice" in op.name
+                or "dynamic_update_slice" in op.line[:200]
+                or any(op.opcode.startswith(c) for c in _COLL_KINDS)
+            ):
+                bytes_fused += b * scale
+            if breakdown_top:
+                bytes_by_label[_op_label(op)] += b * scale
+            if op.opcode == "dot":
+                f = _dot_flops(op, comp) * scale
+                flops_total += f
+                dot_count += 1
+                if breakdown_top:
+                    flops_by_label[_op_label(op)] += f
+            elif op.opcode == "convolution":
+                flops_total += _conv_flops(op, comp) * scale
+            # collectives (incl. async -start variants)
+            base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if base in _COLL_KINDS and not op.opcode.endswith("-done"):
+                size = _type_bytes(op.type_str)
+                if op.opcode.endswith("-start"):
+                    size = size / 2  # start tuple carries (operand, result)
+                coll_bytes[base] += size * _WIRE_FACTOR[base] * scale
+                coll_counts[base] += 1
+            if op.opcode == "while":
+                mbody = re.search(r"body=%?([\w.\-]+)", op.line)
+                trip = None
+                mtrip = _TRIP_RE.search(op.line)  # backend_config, exact
+                if mtrip:
+                    trip = int(mtrip.group(1))
+                else:
+                    mcond = re.search(r"condition=%?([\w.\-]+)", op.line)
+                    if mcond and mcond.group(1) in comps:
+                        trip = _trip_count(comps[mcond.group(1)])
+                if mbody:
+                    t = trip if trip else 1
+                    trip_counts[mbody.group(1)] = t
+                    visit(mbody.group(1), scale * t)
+            elif op.opcode == "conditional":
+                for branch in re.findall(r"%([\w.\-]+)", op.line.split("branch_computations")[-1]):
+                    if branch in comps:
+                        visit(branch, scale)
+            elif op.opcode in ("call", "async-start"):
+                mcall = re.search(r"to_apply=%?([\w.\-]+)", op.line)
+                if mcall:
+                    visit(mcall.group(1), scale)
+
+    visit(entry, 1.0)
+    out = {
+        "dot_flops": flops_total,
+        "hbm_bytes": bytes_total,
+        "hbm_bytes_fused": bytes_fused,
+        "dot_count": dot_count,
+        "collectives": {
+            "bytes_by_kind": dict(coll_bytes),
+            "counts": dict(coll_counts),
+            "total_bytes": float(sum(coll_bytes.values())),
+        },
+        "loop_trip_counts": trip_counts,
+    }
+    if breakdown_top:
+        out["bytes_breakdown"] = dict(
+            sorted(bytes_by_label.items(), key=lambda kv: -kv[1])[:breakdown_top]
+        )
+        out["flops_breakdown"] = dict(
+            sorted(flops_by_label.items(), key=lambda kv: -kv[1])[:breakdown_top]
+        )
+    return out
+
+
+# Back-compat shims (earlier callers)
+def collective_bytes(hlo_text: str) -> dict:
+    return analyze_hlo(hlo_text)["collectives"]
+
+
+def collectives_with_loops(hlo_text: str) -> dict:
+    a = analyze_hlo(hlo_text)
+    out = dict(a["collectives"])
+    out["loop_trip_counts"] = a["loop_trip_counts"]
+    return out

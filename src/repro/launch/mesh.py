@@ -1,0 +1,30 @@
+"""Production mesh definitions (multi-pod dry-run contract).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state; dryrun.py sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, then calls it.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod (v5e-256); 2 pods when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_devices(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,121 @@
+"""Roofline terms for TPU v5e from compiled dry-run artifacts.
+
+  compute term    = per_device_HLO_FLOPs / peak_FLOPs_per_chip
+  memory term     = per_device_HLO_bytes / HBM_bw_per_chip
+  collective term = per_device_wire_bytes / ICI_bw_per_chip
+
+(SPMD: the compiled module IS the per-device program, so dividing the
+module's cost by per-chip peaks equals the brief's global/(chips x peak).)
+
+MODEL_FLOPS uses 6·N_active·D for training (fwd+bwd) and 2·N_active·D for
+inference; N_active discounts routed experts to top_k/E (+ shared).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.model import model_spec
+from ..models.sharding import ParamLeaf
+
+# TPU v5e hardware constants (per chip), from the assignment brief.
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+
+def active_params(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameter counts; routed experts discounted."""
+    spec = model_spec(cfg)
+    total = 0
+    active = 0
+    e = max(cfg.moe.num_experts, 1)
+    frac = cfg.moe.top_k / e if cfg.moe.num_experts else 1.0
+    for leaf in jax.tree.leaves(spec, is_leaf=lambda x: isinstance(x, ParamLeaf)):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        active += int(n * frac) if "experts" in leaf.axes else n
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    _, n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1  # decode: one token per sequence
+    return 2.0 * n_active * tokens
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float  # TPU-fusion traffic model (matmuls/copies/colls)
+    collective_bytes_per_device: float
+    chips: int
+    model_flops_total: float
+    bytes_per_device_pessimistic: float = 0.0  # per-op (CPU-fusion) model
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def memory_s_pessimistic(self) -> float:
+        return self.bytes_per_device_pessimistic / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO flops x chips) — remat/redundancy waste."""
+        hlo_total = self.flops_per_device * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput vs peak, if the dominant term binds:
+        (MODEL_FLOPS / chips / peak) / max(term) — an MFU-style score."""
+        ideal_s = self.model_flops_total / self.chips / PEAK_FLOPS
+        worst = max(self.compute_s, self.memory_s, self.collective_s)
+        return ideal_s / worst if worst else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "bytes_per_device_pessimistic": self.bytes_per_device_pessimistic,
+            "memory_s_pessimistic": self.memory_s_pessimistic,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "model_flops_total": self.model_flops_total,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }

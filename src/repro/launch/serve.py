@@ -1,0 +1,64 @@
+"""Serving launcher: boots a ServeExecutor (optionally from a trained CFS
+run) plus the generator-based dynamic batcher, then runs a request load.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--run", default=None, help="CFS run to load a checkpoint from")
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.core import Colonies, Crypto, InProcTransport
+    from repro.core.cluster import standalone_server
+    from repro.core.fs import CFSClient, MemoryStorage
+    from repro.runtime.jax_executor import ServeExecutor
+    from repro.serve.batcher import InferenceClient
+
+    server_prv, colony_prv = Crypto.prvkey(), Crypto.prvkey()
+    server = standalone_server(Crypto.id(server_prv))
+    server.start_background(failsafe_interval=0.1)
+    client = Colonies(InProcTransport([server]))
+    client.add_colony("serve", Crypto.id(colony_prv), server_prv)
+    storage = MemoryStorage()
+    worker = ServeExecutor(client, "serve", "serve-0", "tpu-serve", storage,
+                           colony_prvkey=colony_prv, arch=args.arch,
+                           max_len=64, run=args.run)
+    worker.start(poll_timeout=0.2)
+    wf = {"colonyname": "serve", "functionspecs": [
+        {"nodename": "batch", "funcname": "generate_batch",
+         "conditions": {"executortype": "tpu-serve", "dependencies": []},
+         "maxexectime": 300}]}
+    g = client.add_generator(
+        {"colonyname": "serve", "name": "batcher", "queuesize": args.batch_size,
+         "timeout": 2.0, "workflow": wf}, colony_prv)
+    infc = InferenceClient(client, CFSClient(client, storage, colony_prv),
+                           "serve", g["generatorid"], colony_prv)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    rids = [infc.submit(rng.integers(0, 200, 8).tolist(),
+                        max_new_tokens=args.max_new_tokens)
+            for _ in range(args.requests)]
+    for rid in rids:
+        print(rid, infc.wait(rid, timeout=300))
+    st = worker.engine.stats
+    print(f"{st['requests']} requests in {st['batches']} batches, "
+          f"{st['tokens']} tokens, {time.time()-t0:.1f}s")
+    worker.stop()
+    server.stop()
+
+
+if __name__ == "__main__":
+    main()

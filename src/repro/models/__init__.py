@@ -1,0 +1,45 @@
+"""Pure-JAX model substrate for the compute continuum."""
+
+from .model import (
+    BlockDef,
+    Layout,
+    abstract_cache,
+    decode_step,
+    decoder_layout,
+    forward,
+    model_spec,
+    mtp_logits,
+    pad_cache,
+    prefill,
+)
+from .sharding import (
+    DEFAULT_RULES,
+    FSDP_RULES,
+    ParamLeaf,
+    abstract_params,
+    count_params,
+    init_params,
+    param_pspecs,
+    param_shardings,
+)
+
+__all__ = [
+    "BlockDef",
+    "Layout",
+    "abstract_cache",
+    "decode_step",
+    "decoder_layout",
+    "forward",
+    "model_spec",
+    "mtp_logits",
+    "pad_cache",
+    "prefill",
+    "DEFAULT_RULES",
+    "FSDP_RULES",
+    "ParamLeaf",
+    "abstract_params",
+    "count_params",
+    "init_params",
+    "param_pspecs",
+    "param_shardings",
+]

@@ -1,0 +1,109 @@
+"""Shared primitive layers: norms, activations, rotary embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    out = out + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def group_norm_heads(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 64e-5) -> jnp.ndarray:
+    """Per-head group norm over the channel dim (RWKV time-mix output).
+
+    x: (..., H, D); scale/bias: (H*D,)
+    """
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    shape = x.shape
+    out = out.reshape(*shape[:-2], shape[-2] * shape[-1])
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def apply_norm(x: jnp.ndarray, params: dict, kind: str, eps: float) -> jnp.ndarray:
+    if kind == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"], eps)
+    return rms_norm(x, params["scale"], eps)
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.nn.sigmoid(x)
+
+
+def activate(gate: jnp.ndarray, up: jnp.ndarray | None, kind: str) -> jnp.ndarray:
+    """Gated (swiglu/geglu) or plain (gelu) MLP nonlinearity."""
+    if kind == "swiglu":
+        assert up is not None
+        return silu(gate) * up
+    if kind == "geglu":
+        assert up is not None
+        return jax.nn.gelu(gate) * up
+    return jax.nn.gelu(gate)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for the rotated half of the head dim."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """Rotate (B, S, H, D) (or (B, S, D) for shared keys) by position.
+
+    positions: (B, S) or (S,) int32.
+    """
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)  # (D/2,)
+    pos = positions.astype(jnp.float32)
+    angles = jnp.einsum("...s,f->...sf", pos, inv)  # (..., S, D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    if x.ndim == 4:  # (B, S, H, D) — broadcast over heads
+        sin = sin[..., None, :]
+        cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset: int = 0, window: int = 0) -> jnp.ndarray:
+    """(q_len, kv_len) boolean mask; True = attendable.
+
+    ``q_offset`` is the absolute position of query 0 (prefill/decode reuse).
+    ``window`` > 0 restricts to a sliding window (SWA).
+    """
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    mask = kv_pos <= q_pos
+    if window > 0:
+        mask = mask & (kv_pos > q_pos - window)
+    return mask

@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and KV are low-rank compressed; only the compressed latent
+(c_kv, kv_lora_rank) and the shared decoupled RoPE key (qk_rope_head_dim)
+are cached at decode time — the architecture's signature memory win
+(576 vs 2·128·128 floats per token for the 128-head config).
+
+Decode uses the standard *matrix absorption*: w_kv_b is folded into the
+query/output projections so the latent is never expanded to per-head K/V.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import apply_rope, causal_mask, rms_norm
+from .sharding import ParamLeaf
+
+
+def mla_spec(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    m = cfg.mla
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    return {
+        "wq_a": ParamLeaf((d, m.q_lora_rank), ("embed", "lora")),
+        "q_norm": {"scale": ParamLeaf((m.q_lora_rank,), ("lora",), init="ones")},
+        "wq_b": ParamLeaf((m.q_lora_rank, h, dn + dr), ("lora", "heads", "qk_dim")),
+        "wkv_a": ParamLeaf((d, m.kv_lora_rank + dr), ("embed", "lora")),
+        "kv_norm": {"scale": ParamLeaf((m.kv_lora_rank,), ("lora",), init="ones")},
+        "wk_b": ParamLeaf((m.kv_lora_rank, h, dn), ("lora", "heads", "qk_dim")),
+        "wv_b": ParamLeaf((m.kv_lora_rank, h, dv), ("lora", "heads", "head_dim")),
+        "wo": ParamLeaf((h, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _project_q(params: dict, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray):
+    m = cfg.mla
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wq_a"]), params["q_norm"]["scale"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params: dict, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray):
+    m = cfg.mla
+    ckv_rope = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv, k_rope = ckv_rope[..., : m.kv_lora_rank], ckv_rope[..., m.kv_lora_rank :]
+    c_kv = rms_norm(c_kv, params["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # (B, S, dr) shared
+    return c_kv, k_rope
+
+
+def _pad_v(v: jnp.ndarray, to_dim: int) -> jnp.ndarray:
+    """Zero-pad V's head dim so q/k/v share a head_dim (trimmed after)."""
+    pad = to_dim - v.shape[-1]
+    if pad <= 0:
+        return v
+    return jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+
+
+def mla_fwd(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    *,
+    return_cache: bool = False,
+):
+    """Full-sequence MLA (training / prefill)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(params, x, cfg, positions)
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"])
+
+    # Fold the (nope, rope) split into one key/query tensor so the shared
+    # block-chunked attention path applies (MHA: KV groups == heads).
+    from .attention import blockwise_attention
+
+    h = cfg.num_heads
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # head_dim mismatch (qk 192 vs v 128): attention scales by qk dim.
+    out = blockwise_attention(q_full, k_full, _pad_v(v, q_full.shape[-1]), cfg.q_chunk)
+    out = out[..., : m.v_head_dim]
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if return_cache:
+        return y, {"c_kv": c_kv, "k_rope": k_rope}
+    return y
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def abstract_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(
+    params: dict,
+    x_t: jnp.ndarray,  # (B, 1, d)
+    cache: dict,
+    pos: jnp.ndarray,  # scalar
+    cfg: ModelConfig,
+) -> tuple[jnp.ndarray, dict]:
+    """Absorbed decode: score/value paths stay in the latent space."""
+    m = cfg.mla
+    pos_arr = jnp.reshape(pos, (1,))
+    q_nope, q_rope = _project_q(params, x_t, cfg, pos_arr)  # (B,1,H,dn/dr)
+    c_t, kr_t = _project_kv_latent(params, x_t, cfg, pos_arr)
+
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_t.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_t.astype(cache["k_rope"].dtype), (0, pos, 0))
+
+    # Absorption: q_eff[h] = q_nope[h] @ wk_b[:, h, :].T  -> latent space.
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])  # (B,1,H,r)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+        + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    ln = c_kv.shape[1]
+    valid = (jnp.arange(ln) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv)  # (B,1,H,r)
+    out = jnp.einsum("bshr,rhk->bshk", out_lat, params["wv_b"])  # absorb wv_b
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts with grouped capacity dispatch (GShard/GLaM style).
+
+Dense one-hot dispatch over the full sequence costs O(T²) in the dispatch
+einsum, so tokens are split into groups of ``group_size``; each group
+routes independently with capacity ``C = group * top_k * cf / E``. The
+dispatch/combine tensors then cost O(T · group · k · cf · d) — linear in T.
+
+Expert-parallel sharding: the ``experts`` axis maps to the mesh "model"
+axis (clean for deepseek's 256/16); when E < mesh width (mixtral's 8),
+the per-expert ``expert_ffn`` hidden is sharded instead — the per-arch
+rules tables pick which (configs/*.py).
+
+Aux losses: switch-style load balancing + router z-loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import activate
+from .sharding import ParamLeaf
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    e = cfg.moe.num_experts
+    f = cfg.moe.expert_d_ff
+    spec = {
+        "router": ParamLeaf((d, e), ("embed", "experts"), scale=0.02),
+        "w_gate": ParamLeaf((e, d, f), ("experts", "expert_embed", "expert_ffn")),
+        "w_up": ParamLeaf((e, d, f), ("experts", "expert_embed", "expert_ffn")),
+        "w_down": ParamLeaf((e, f, d), ("experts", "expert_ffn", "expert_embed")),
+    }
+    if cfg.moe.num_shared_experts > 0:
+        fs = f * cfg.moe.num_shared_experts
+        spec["shared_gate"] = ParamLeaf((d, fs), ("embed", "ffn"))
+        spec["shared_up"] = ParamLeaf((d, fs), ("embed", "ffn"))
+        spec["shared_down"] = ParamLeaf((fs, d), ("ffn", "embed"))
+    return spec
+
+
+def _route(
+    x: jnp.ndarray,  # (G, S, d) grouped tokens
+    router: jnp.ndarray,
+    cfg: ModelConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray, dict]:
+    """Top-k routing. Returns (dispatch (G,S,E,C), combine (G,S,E,C), aux)."""
+    e = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    g, s, _ = x.shape
+    capacity = max(1, int(s * k * cfg.moe.capacity_factor / e))
+
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32), router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k gates, renormalized (mixtral/deepseek convention)
+    top_gates, top_idx = jax.lax.top_k(probs, k)  # (G,S,k)
+    top_gates = top_gates / jnp.maximum(top_gates.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert buffer
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)  # (G,S,k,E)
+    flat = onehot.reshape(g, s * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(g, s, k, e)
+    pos = jnp.einsum("gske,gske->gsk", pos_in_expert, onehot)  # (G,S,k)
+    keep = pos < capacity
+    gates = top_gates * keep
+
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity, dtype=jnp.float32)
+    # (G,S,k,E) x (G,S,k,C) -> (G,S,E,C)
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot * keep[..., None], pos_oh)
+    combine = jnp.einsum("gske,gskc->gsec", (onehot * gates[..., None]), pos_oh)
+
+    # Aux: switch load-balance (first-choice stats) + router z-loss.
+    me = probs.mean(axis=(0, 1))  # mean gate prob per expert
+    first = jax.nn.one_hot(top_idx[..., 0], e, dtype=jnp.float32)
+    ce = first.mean(axis=(0, 1))  # fraction of tokens per expert
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - (keep.sum() / (g * s * k))
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "dropped_frac": dropped}
+    return dispatch, combine, aux
+
+
+def moe_fwd(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (B, S, d), aux losses."""
+    b, s, d = x.shape
+    group = min(cfg.moe.group_size, b * s)
+    tokens = x.reshape(b * s, d)
+    pad = (-tokens.shape[0]) % group
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    grouped = tokens.reshape(-1, group, d)  # (G, group, d)
+
+    dispatch, combine, aux = _route(grouped, params["router"], cfg)
+    dtype = x.dtype
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch.astype(dtype), grouped)
+    gate = jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+    h = activate(gate, up, cfg.activation)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(dtype), expert_out)
+
+    out = out.reshape(-1, d)
+    if pad:
+        out = out[: b * s]
+    out = out.reshape(b, s, d)
+
+    if cfg.moe.num_shared_experts > 0:
+        sg = jnp.einsum("bsd,df->bsf", x, params["shared_gate"])
+        su = jnp.einsum("bsd,df->bsf", x, params["shared_up"])
+        out = out + jnp.einsum("bsf,fd->bsd", activate(sg, su, cfg.activation), params["shared_down"])
+    return out, aux
+
+
+def moe_aux_loss(aux: dict, cfg: ModelConfig) -> jnp.ndarray:
+    return (
+        cfg.moe.aux_loss_weight * aux["lb_loss"]
+        + cfg.moe.router_z_weight * aux["z_loss"]
+    )

@@ -1,0 +1,286 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free, O(1) state.
+
+Time-mix with data-dependent token-shift (ddlerp) and *data-dependent
+per-channel decay* w_t = exp(-exp(w0 + lora(x_t))) — the Finch signature.
+
+Training/prefill uses a chunked WKV: within a chunk, decay ratios are
+computed pairwise in log space, exp(cum_{t-1} - cum_s) ≤ 1 for s < t, so
+the formulation never overflows regardless of decay magnitude (the TPU
+adaptation of the CUDA wkv6 kernel — see DESIGN.md). Cross-chunk state is
+carried by a sequential scan. Decode is the O(1) recurrence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import group_norm_heads, silu
+from .sharding import ParamLeaf
+
+_MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    hs = cfg.rwkv.head_size
+    return cfg.d_model // hs, hs
+
+
+def rwkv_time_mix_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    lw = cfg.rwkv.decay_lora
+    lm = cfg.rwkv.mix_lora
+
+    def w0_init(key: jax.Array) -> jnp.ndarray:
+        # decay spread across channels (rwkv reference: -6..~0 pre-exp)
+        ratio = jnp.arange(d, dtype=jnp.float32) / max(d - 1, 1)
+        return -6.0 + 5.0 * ratio**0.9
+
+    return {
+        "mu_x": ParamLeaf((d,), ("embed",), init="zeros"),
+        "mu": ParamLeaf((5, d), (None, "embed"), init="zeros"),
+        "mix_a": ParamLeaf((d, 5 * lm), ("embed", "lora"), scale=0.02),
+        "mix_b": ParamLeaf((5, lm, d), (None, "lora", "embed"), scale=0.02),
+        "w0": ParamLeaf((d,), ("embed",), custom=w0_init),
+        "w_a": ParamLeaf((d, lw), ("embed", "lora"), scale=0.02),
+        "w_b": ParamLeaf((lw, d), ("lora", "embed"), scale=0.02),
+        "u": ParamLeaf((d,), ("embed",), init="zeros"),
+        "wr": ParamLeaf((d, d), ("embed", "inner")),
+        "wk": ParamLeaf((d, d), ("embed", "inner")),
+        "wv": ParamLeaf((d, d), ("embed", "inner")),
+        "wg": ParamLeaf((d, d), ("embed", "inner")),
+        "wo": ParamLeaf((d, d), ("inner", "embed")),
+        "ln_x": {
+            "scale": ParamLeaf((d,), ("embed",), init="ones"),
+            "bias": ParamLeaf((d,), ("embed",), init="zeros"),
+        },
+    }
+
+
+def rwkv_channel_mix_spec(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamLeaf((d,), ("embed",), init="zeros"),
+        "mu_r": ParamLeaf((d,), ("embed",), init="zeros"),
+        "wk": ParamLeaf((d, f), ("embed", "ffn")),
+        "wv": ParamLeaf((f, d), ("ffn", "embed")),
+        "wr": ParamLeaf((d, d), ("embed", "inner")),
+    }
+
+
+def _token_shift(x: jnp.ndarray, x_prev: jnp.ndarray | None) -> jnp.ndarray:
+    """Shift right by one along time; first slot filled by x_prev (decode state)."""
+    if x_prev is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = x_prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _ddlerp(params: dict, x: jnp.ndarray, xs: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    lm = params["mix_b"].shape[1]
+    dx = xs - x
+    xx = x + dx * params["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("btd,dk->btk", xx, params["mix_a"]))
+    lora = lora.reshape(*lora.shape[:-1], 5, lm)
+    dyn = jnp.einsum("btnl,nld->btnd", lora, params["mix_b"])  # (B,T,5,d)
+    out = {}
+    for i, name in enumerate(_MIX_NAMES):
+        mix = params["mu"][i].astype(x.dtype) + dyn[:, :, i].astype(x.dtype)
+        out[name] = x + dx * mix
+    return out
+
+
+def _decay(params: dict, xw: jnp.ndarray) -> jnp.ndarray:
+    """log(w_t) = -exp(w0 + tanh(xw A) B) ∈ (-inf, 0); shape (B,T,d), fp32."""
+    lora = jnp.einsum(
+        "btl,ld->btd", jnp.tanh(jnp.einsum("btd,dl->btl", xw, params["w_a"])), params["w_b"]
+    )
+    return -jnp.exp(
+        jnp.clip(params["w0"].astype(jnp.float32) + lora.astype(jnp.float32), -12.0, 4.0)
+    )
+
+
+def _wkv_chunked(
+    r: jnp.ndarray,  # (B,T,H,K) fp32
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # (B,T,H,V)
+    logw: jnp.ndarray,  # (B,T,H,K) fp32, <= 0
+    u: jnp.ndarray,  # (H,K)
+    s0: jnp.ndarray,  # (B,H,K,V) fp32
+    chunk: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    bsz, t, h, dk = r.shape
+    dv = v.shape[-1]
+    nch = t // chunk
+
+    def re(x):  # (B,T,...) -> (nch, B, chunk, ...)
+        return jnp.moveaxis(x.reshape(bsz, nch, chunk, *x.shape[2:]), 1, 0)
+
+    rc, kc, vc, wc = re(r), re(k), re(v), re(logw)
+
+    @jax.checkpoint  # per-chunk remat: the (B,c,c,H,K) pairwise decay
+    def body(s, inp):  # tensor is recomputed in backward, never stacked
+        rk, kk, vk, lw = inp  # (B,c,H,K/V)
+        cum = jnp.cumsum(lw, axis=1)  # (B,c,H,K)
+        cum_prev = cum - lw  # cum up to t-1 (exclusive)
+        # Intra-chunk pairwise: ratio[t,s] = exp(cum_prev[t] - cum[s]) for s<t
+        diff = cum_prev[:, :, None] - cum[:, None, :]  # (B,c,c,H,K), <=0 for s<t
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)[None, :, :, None, None]
+        ratio = jnp.where(tri, jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bthk,bshk,btshk->bths", rk, kk, ratio)
+        # diagonal "bonus" u term
+        diag = jnp.einsum("bthk,hk,bthk->bth", rk, u, kk)
+        out = jnp.einsum("bths,bshv->bthv", scores, vk)
+        out = out + diag[..., None] * vk
+        # cross-chunk: r_t decayed against incoming state
+        rw = rk * jnp.exp(cum_prev)
+        out = out + jnp.einsum("bthk,bhkv->bthv", rw, s)
+        # state update: S' = diag(exp(cum_c)) S + sum_s exp(cum_c - cum_s) k_s v_s
+        tail = jnp.exp(cum[:, -1][:, None] - cum)  # (B,c,H,K)
+        s_new = jnp.exp(cum[:, -1])[..., None] * s + jnp.einsum(
+            "bshk,bshv->bhkv", kk * tail, vk
+        )
+        return s_new, out
+
+    s_final, out = jax.lax.scan(body, s0, (rc, kc, vc, wc))
+    out = jnp.moveaxis(out, 0, 1).reshape(bsz, t, h, dv)
+    return out, s_final
+
+
+def rwkv_time_mix_fwd(
+    params: dict,
+    x: jnp.ndarray,  # (B,T,d)
+    cfg: ModelConfig,
+    *,
+    chunk: int = 32,
+    state: dict | None = None,
+    return_cache: bool = False,
+):
+    bsz, t, d = x.shape
+    h, hs = _heads(cfg)
+    x_prev = state["x_prev"] if state is not None else None
+    xs = _token_shift(x, x_prev)
+    mixed = _ddlerp(params, x, xs)
+
+    from .sharding import rules_for, shard_activation
+
+    rules = rules_for(cfg)
+    r = jnp.einsum("btd,dk->btk", mixed["r"], params["wr"])
+    k = jnp.einsum("btd,dk->btk", mixed["k"], params["wk"])
+    v = jnp.einsum("btd,dk->btk", mixed["v"], params["wv"])
+    g = silu(jnp.einsum("btd,dk->btk", mixed["g"], params["wg"]))
+    logw = _decay(params, mixed["w"])  # (B,T,d) fp32
+    # Keep batch on (pod, data) and channels on model through the WKV scan
+    # (same GSPMD batch-all-gather failure mode as the mamba scan).
+    r, k, v, logw = (
+        shard_activation(t, ("batch", "seq", "inner"), rules) for t in (r, k, v, logw)
+    )
+
+    def split_heads(a):
+        return a.reshape(bsz, t, h, hs)
+
+    rh = split_heads(r).astype(jnp.float32)
+    kh = split_heads(k).astype(jnp.float32)
+    vh = split_heads(v).astype(jnp.float32)
+    wh = split_heads(logw)
+    u = params["u"].astype(jnp.float32).reshape(h, hs)
+
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    s0 = (
+        state["wkv"]
+        if state is not None
+        else jnp.zeros((bsz, h, hs, hs), jnp.float32)
+    )
+    if cfg.use_pallas:
+        from ..kernels.ops import rwkv6_chunked
+
+        out, s_final = rwkv6_chunked(rh, kh, vh, wh, u, s0, chunk=c)
+    else:
+        out, s_final = _wkv_chunked(rh, kh, vh, wh, u, s0, c)
+    out = group_norm_heads(out.astype(x.dtype), params["ln_x"]["scale"], params["ln_x"]["bias"])
+    out = out.reshape(bsz, t, d) * g
+    y = jnp.einsum("btd,dk->btk", out, params["wo"])
+    if return_cache:
+        return y, {"wkv": s_final, "x_prev": x[:, -1]}
+    return y
+
+
+def rwkv_channel_mix_fwd(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    state: dict | None = None,
+    return_cache: bool = False,
+):
+    x_prev = state["x_prev"] if state is not None else None
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * params["mu_k"].astype(x.dtype)
+    xr = x + (xs - x) * params["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, params["wk"])))
+    out = jax.nn.sigmoid(jnp.einsum("btd,dk->btk", xr, params["wr"])) * jnp.einsum(
+        "btf,fd->btd", kk, params["wv"]
+    )
+    if return_cache:
+        return out, {"x_prev": x[:, -1]}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, O(1) state)
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    h, hs = _heads(cfg)
+    d = cfg.d_model
+    return {
+        "tm": {"wkv": jnp.zeros((batch, h, hs, hs), jnp.float32), "x_prev": jnp.zeros((batch, d), dtype)},
+        "cm": {"x_prev": jnp.zeros((batch, d), dtype)},
+    }
+
+
+def abstract_rwkv_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    h, hs = _heads(cfg)
+    d = cfg.d_model
+    return {
+        "tm": {
+            "wkv": jax.ShapeDtypeStruct((batch, h, hs, hs), jnp.float32),
+            "x_prev": jax.ShapeDtypeStruct((batch, d), dtype),
+        },
+        "cm": {"x_prev": jax.ShapeDtypeStruct((batch, d), dtype)},
+    }
+
+
+def rwkv_time_mix_decode(params: dict, x_t: jnp.ndarray, state: dict, cfg: ModelConfig):
+    """x_t: (B,1,d). Sequential recurrence — exact, no chunking."""
+    bsz, _, d = x_t.shape
+    h, hs = _heads(cfg)
+    xs = state["x_prev"][:, None, :].astype(x_t.dtype)
+    mixed = _ddlerp(params, x_t, xs)
+    r = jnp.einsum("btd,dk->btk", mixed["r"], params["wr"]).reshape(bsz, h, hs).astype(jnp.float32)
+    k = jnp.einsum("btd,dk->btk", mixed["k"], params["wk"]).reshape(bsz, h, hs).astype(jnp.float32)
+    v = jnp.einsum("btd,dk->btk", mixed["v"], params["wv"]).reshape(bsz, h, hs).astype(jnp.float32)
+    g = silu(jnp.einsum("btd,dk->btk", mixed["g"], params["wg"]))
+    w = jnp.exp(_decay(params, mixed["w"]))[:, 0].reshape(bsz, h, hs)  # (B,H,K)
+    u = params["u"].astype(jnp.float32).reshape(h, hs)
+
+    s = state["wkv"]  # (B,H,K,V)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    out = jnp.einsum("bhk,bhkv->bhv", r, s + u[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    out = group_norm_heads(out[:, None].reshape(bsz, 1, h, hs).astype(x_t.dtype),
+                           params["ln_x"]["scale"], params["ln_x"]["bias"])
+    out = out.reshape(bsz, 1, d) * g
+    y = jnp.einsum("btd,dk->btk", out, params["wo"])
+    return y, {"wkv": s_new, "x_prev": x_t[:, -1]}
+
+
+def rwkv_channel_mix_decode(params: dict, x_t: jnp.ndarray, state: dict, cfg: ModelConfig):
+    y, new = rwkv_channel_mix_fwd(params, x_t, cfg, state=state, return_cache=True)
+    return y, new

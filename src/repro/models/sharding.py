@@ -1,0 +1,271 @@
+"""Logical-axis sharding (MaxText-style) for the compute continuum.
+
+Every parameter leaf is declared once with *logical* axis names
+("embed", "heads", "ffn", "experts", ...). A per-architecture *rules*
+table maps logical names to physical mesh axes; ``None`` replicates.
+This keeps model code mesh-agnostic: the same definition lowers on the
+single-pod (data, model) mesh, the multi-pod (pod, data, model) mesh,
+and the 1-device CPU smoke-test mesh.
+
+Conventions (Megatron/MaxText-ish):
+  * "batch"   -> ("pod", "data")   — pure DP
+  * "vocab"   -> "model"           — sharded embeddings/logits
+  * "heads"   -> "model"           — tensor parallel attention
+  * "ffn"     -> "model"           — tensor parallel MLP
+  * "experts" -> "model"           — expert parallel MoE
+  * "embed"   -> "data" (FSDP) for big configs, None for small
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = dict[str, Any]  # logical name -> mesh axis | tuple | None
+
+# Default tensor-parallel rules (small models: no FSDP).
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "embed_noshard": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qk_dim": None,
+    "ffn": "model",
+    "experts": "model",
+    "expert_ffn": None,
+    "expert_embed": None,
+    "layers": None,
+    "state": None,
+    "conv": None,
+    "dt_rank": None,
+    "lora": None,
+    "inner": "model",  # mamba/rwkv expanded inner channels
+    "frames": None,
+    "patches": None,
+    "vision_embed": None,
+}
+
+# FSDP rules for >=100B configs: weights' "embed" axis sharded over data.
+FSDP_RULES: Rules = dict(DEFAULT_RULES, embed="data")
+
+
+def rules_for(cfg) -> Rules:
+    """Resolve an architecture's rules: base table + per-arch overrides."""
+    base = FSDP_RULES if getattr(cfg, "sharding_rules", "tp") == "fsdp" else DEFAULT_RULES
+    overrides = getattr(cfg, "rules_overrides", None) or {}
+    return {**base, **overrides}
+
+
+def resolve_axes(axes: tuple[str | None, ...], rules: Rules, mesh: Mesh) -> P:
+    """Map logical axes to a PartitionSpec valid on this mesh."""
+    spec: list[Any] = []
+    for name in axes:
+        if name is None:
+            spec.append(None)
+            continue
+        target = rules.get(name, None)
+        if target is None:
+            spec.append(None)
+            continue
+        if isinstance(target, (tuple, list)):
+            present = tuple(a for a in target if a in mesh.axis_names)
+            spec.append(present if present else None)
+        else:
+            spec.append(target if target in mesh.axis_names else None)
+    # PartitionSpec forbids repeating a mesh axis; keep the first occurrence.
+    used: set[str] = set()
+    cleaned: list[Any] = []
+    for s in spec:
+        if s is None:
+            cleaned.append(None)
+        elif isinstance(s, tuple):
+            keep = tuple(a for a in s if a not in used)
+            used.update(keep)
+            cleaned.append(keep if keep else None)
+        else:
+            if s in used:
+                cleaned.append(None)
+            else:
+                used.add(s)
+                cleaned.append(s)
+    return P(*cleaned)
+
+
+def _divisible(shape: tuple[int, ...], pspec: P, mesh: Mesh) -> P:
+    """Sharding admission policy per dim:
+
+    * divides evenly            -> shard (no waste)
+    * dim >= axis size          -> shard anyway; GSPMD pads the ragged tail
+      (waste < 1 shard out of ceil(dim/axis), e.g. qwen's 40 heads on a
+      16-wide axis pad to 48 — 20% padding beats 16x replication)
+    * dim < axis size           -> replicate (padding would exceed 100%)
+    """
+    out: list[Any] = []
+    for dim, s in zip(shape, tuple(pspec) + (None,) * (len(shape) - len(pspec))):
+        if s is None:
+            out.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        # jit in_shardings require exact divisibility; uneven GSPMD padding
+        # is only legal on intermediates, so params keep the strict rule.
+        out.append(s if dim % total == 0 else None)
+    return P(*out)
+
+
+@dataclass
+class ParamLeaf:
+    """Declarative parameter: shape + logical axes + init."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | embed | custom
+    scale: float | None = None  # overrides the default fan-in scaling
+    custom: Callable[[jax.Array], jnp.ndarray] | None = None
+
+    def __post_init__(self) -> None:
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack_spec(spec: Any, n: int, axis_name: str = "layers") -> Any:
+    """Prefix every leaf with a stacked layer axis (for scan-over-layers)."""
+    return jax.tree.map(
+        lambda leaf: ParamLeaf(
+            shape=(n,) + leaf.shape,
+            axes=(axis_name,) + leaf.axes,
+            init=leaf.init,
+            scale=leaf.scale,
+            custom=leaf.custom,
+        ),
+        spec,
+        is_leaf=lambda x: isinstance(x, ParamLeaf),
+    )
+
+
+def init_params(key: jax.Array, spec: Any, dtype: jnp.dtype) -> Any:
+    """Materialize a parameter pytree from a spec tree."""
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=lambda x: isinstance(x, ParamLeaf))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, leaf in zip(keys, leaves):
+        out.append(_init_leaf(k, leaf, dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _init_leaf(key: jax.Array, leaf: ParamLeaf, dtype: jnp.dtype) -> jnp.ndarray:
+    if leaf.custom is not None:
+        base = leaf.custom(key)
+        if base.shape != leaf.shape:
+            # Custom inits produce the per-layer shape; tile over the stacked
+            # leading axes (scan-over-layers) with independent keys.
+            stack_dims = leaf.shape[: len(leaf.shape) - base.ndim]
+            assert leaf.shape == stack_dims + base.shape, (leaf.shape, base.shape)
+            n = 1
+            for d in stack_dims:
+                n *= d
+            keys = jax.random.split(key, n)
+            base = jnp.stack([leaf.custom(k) for k in keys]).reshape(leaf.shape)
+        return base.astype(dtype)
+    if leaf.init == "zeros":
+        return jnp.zeros(leaf.shape, dtype)
+    if leaf.init == "ones":
+        return jnp.ones(leaf.shape, dtype)
+    if leaf.init == "embed":
+        scale = leaf.scale if leaf.scale is not None else 0.02
+        return (jax.random.normal(key, leaf.shape, jnp.float32) * scale).astype(dtype)
+    # fan-in scaled normal; fan-in = product of all dims but the last,
+    # excluding a leading stacked layer axis.
+    shape = leaf.shape
+    fan_in = 1
+    for d in shape[:-1]:
+        fan_in *= d
+    if leaf.scale is not None:
+        scale = leaf.scale
+    else:
+        scale = (1.0 / max(fan_in, 1)) ** 0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def abstract_params(spec: Any, dtype: jnp.dtype) -> Any:
+    """ShapeDtypeStruct tree (for dry-run lowering without allocation)."""
+    return jax.tree.map(
+        lambda leaf: jax.ShapeDtypeStruct(leaf.shape, dtype),
+        spec,
+        is_leaf=lambda x: isinstance(x, ParamLeaf),
+    )
+
+
+def param_pspecs(spec: Any, rules: Rules, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching the param tree."""
+    return jax.tree.map(
+        lambda leaf: _divisible(leaf.shape, resolve_axes(leaf.axes, rules, mesh), mesh),
+        spec,
+        is_leaf=lambda x: isinstance(x, ParamLeaf),
+    )
+
+
+def param_shardings(spec: Any, rules: Rules, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps),
+        param_pspecs(spec, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+import contextlib
+import threading
+
+_MESH_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh):
+    """Make a concrete mesh visible to shard_activation during tracing.
+
+    The classic ``with mesh:`` resource env is NOT visible via
+    ``get_abstract_mesh()`` during jit tracing in this JAX version, so the
+    launcher/dry-run wraps lowering in this context instead."""
+    prev = getattr(_MESH_CTX, "mesh", None)
+    _MESH_CTX.mesh = mesh
+    try:
+        yield
+    finally:
+        _MESH_CTX.mesh = prev
+
+
+def current_activation_mesh() -> Mesh | None:
+    return getattr(_MESH_CTX, "mesh", None)
+
+
+def shard_activation(x: jnp.ndarray, axes: tuple[str | None, ...], rules: Rules) -> jnp.ndarray:
+    """with_sharding_constraint by logical names (no-op outside a mesh ctx)."""
+    mesh = current_activation_mesh()
+    if mesh is None:
+        return x
+    try:
+        pspec = _divisible(x.shape, resolve_axes(axes, rules, mesh), mesh)
+        if all(s is None for s in tuple(pspec)):
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+    except (ValueError, AttributeError, RuntimeError):
+        return x
+
+
+def count_params(spec: Any) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(spec, is_leaf=lambda x: isinstance(x, ParamLeaf)):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+    return total

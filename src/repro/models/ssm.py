@@ -1,0 +1,220 @@
+"""Mamba-1 selective SSM block (jamba's sequence mixer, arXiv:2403.19887).
+
+Training/prefill uses a *chunked* selective scan: a sequential
+``lax.scan`` over chunks with an intra-chunk associative scan, so the
+(B, T, d_inner, state) discretized tensor is only ever materialized one
+chunk at a time (the TPU adaptation of the paper's hardware-aware CUDA
+scan — see DESIGN.md). Decode is the O(1) state update.
+
+Jamba-style extras: RMS norms on dt/B/C projections.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import rms_norm, silu
+from .sharding import ParamLeaf
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.mamba.expand * cfg.d_model
+
+
+def mamba_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = _d_inner(cfg)
+    n = cfg.mamba.state_dim
+    r = cfg.mamba.dt_rank
+    cw = cfg.mamba.conv_width
+
+    def a_log_init(key: jax.Array) -> jnp.ndarray:
+        a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+        return jnp.log(a)
+
+    def dt_bias_init(key: jax.Array) -> jnp.ndarray:
+        # dt in [1e-3, 1e-1] after softplus (mamba reference init)
+        dt = jnp.exp(
+            jax.random.uniform(key, (di,), jnp.float32)
+            * (math.log(0.1) - math.log(1e-3))
+            + math.log(1e-3)
+        )
+        return dt + jnp.log(-jnp.expm1(-dt))
+
+    return {
+        "in_proj": ParamLeaf((d, 2 * di), ("embed", "inner")),
+        "conv_w": ParamLeaf((cw, di), ("conv", "inner"), scale=(1.0 / cw) ** 0.5),
+        "conv_b": ParamLeaf((di,), ("inner",), init="zeros"),
+        "x_proj": ParamLeaf((di, r + 2 * n), ("inner", "dt_rank")),
+        "dt_w": ParamLeaf((r, di), ("dt_rank", "inner"), scale=r**-0.5),
+        "dt_b": ParamLeaf((di,), ("inner",), custom=dt_bias_init),
+        "a_log": ParamLeaf((di, n), ("inner", "state"), custom=a_log_init),
+        "d_skip": ParamLeaf((di,), ("inner",), init="ones"),
+        "out_proj": ParamLeaf((di, d), ("inner", "embed")),
+        "dt_norm": {"scale": ParamLeaf((r,), ("dt_rank",), init="ones")},
+        "b_norm": {"scale": ParamLeaf((n,), ("state",), init="ones")},
+        "c_norm": {"scale": ParamLeaf((n,), ("state",), init="ones")},
+    }
+
+
+def _conv1d_causal(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, state: jnp.ndarray | None):
+    """Depthwise causal conv. x: (B,T,di), w: (cw,di). state: (B,cw-1,di)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, T+cw-1, di)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(cw))
+    new_state = xp[:, -(cw - 1) :, :] if cw > 1 else jnp.zeros_like(pad)
+    return out + b[None, None, :], new_state
+
+
+def _ssm_inputs(params: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """Project to (dt, B, C) with jamba norms; returns fp32 scan operands."""
+    n = cfg.mamba.state_dim
+    r = cfg.mamba.dt_rank
+    dbc = jnp.einsum("btd,dk->btk", x, params["x_proj"])
+    dt, b_mat, c_mat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = rms_norm(dt, params["dt_norm"]["scale"], cfg.norm_eps)
+    b_mat = rms_norm(b_mat, params["b_norm"]["scale"], cfg.norm_eps)
+    c_mat = rms_norm(c_mat, params["c_norm"]["scale"], cfg.norm_eps)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt, params["dt_w"]).astype(jnp.float32)
+        + params["dt_b"].astype(jnp.float32)
+    )  # (B,T,di) fp32
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (di, n)
+    return dt, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32), a
+
+
+def _chunk_scan(dt, b_mat, c_mat, a, x, h0, chunk: int):
+    """Chunked selective scan.
+
+    dt, x: (B,T,di) fp32/bf16; b_mat,c_mat: (B,T,n); a: (di,n); h0: (B,di,n).
+    Returns y (B,T,di) fp32 and final state (B,di,n).
+    """
+    bsz, t, di = dt.shape
+    n = a.shape[1]
+    nchunks = t // chunk
+
+    dt_c = dt.reshape(bsz, nchunks, chunk, di)
+    x_c = x.astype(jnp.float32).reshape(bsz, nchunks, chunk, di)
+    b_c = b_mat.reshape(bsz, nchunks, chunk, n)
+    c_c = c_mat.reshape(bsz, nchunks, chunk, n)
+
+    @jax.checkpoint  # per-chunk remat: backward recomputes the (B,c,di,n)
+    def body(h, inp):  # discretized tensors instead of stacking them
+        dtk, xk, bk, ck = inp  # (B, chunk, ...)
+        # discretize: da (B,c,di,n) = exp(dt*a); dbx = dt*x*B
+        da = jnp.exp(jnp.einsum("bcd,dn->bcdn", dtk, a))
+        dbx = jnp.einsum("bcd,bcn->bcdn", dtk * xk, bk)
+        # intra-chunk associative scan over the chunk axis
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        acc_a, acc_b = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h_all = acc_a * h[:, None] + acc_b  # (B,c,di,n)
+        yk = jnp.einsum("bcdn,bcn->bcd", h_all, ck)
+        return h_all[:, -1], yk
+
+    h_final, y = jax.lax.scan(
+        body,
+        h0,
+        (
+            jnp.moveaxis(dt_c, 1, 0),
+            jnp.moveaxis(x_c, 1, 0),
+            jnp.moveaxis(b_c, 1, 0),
+            jnp.moveaxis(c_c, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(y, 0, 1).reshape(bsz, t, di)
+    return y, h_final
+
+
+def mamba_fwd(
+    params: dict,
+    x: jnp.ndarray,  # (B,T,d)
+    cfg: ModelConfig,
+    *,
+    chunk: int = 64,
+    return_cache: bool = False,
+):
+    from .sharding import rules_for, shard_activation
+
+    rules = rules_for(cfg)
+    bsz, t, _ = x.shape
+    di = _d_inner(cfg)
+    xz = jnp.einsum("btd,dk->btk", x, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, conv_state = _conv1d_causal(xin, params["conv_w"], params["conv_b"], None)
+    xin = silu(xin)
+    # Pin the scan operands' sharding: batch stays on (pod, data) and the
+    # expanded inner channels on model — without this GSPMD all-gathers the
+    # batch through the chunked-scan reshapes (16x redundant work; see
+    # EXPERIMENTS.md §Perf jamba iteration 1).
+    xin = shard_activation(xin, ("batch", "seq", "inner"), rules)
+
+    dt, b_mat, c_mat, a = _ssm_inputs(params, xin, cfg)
+    dt = shard_activation(dt, ("batch", "seq", "inner"), rules)
+    b_mat = shard_activation(b_mat, ("batch", "seq", None), rules)
+    c_mat = shard_activation(c_mat, ("batch", "seq", None), rules)
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    h0 = jnp.zeros((bsz, di, a.shape[1]), jnp.float32)
+    if cfg.use_pallas:
+        from ..kernels.ops import mamba_chunk_scan
+
+        y, h = mamba_chunk_scan(dt, b_mat, c_mat, a, xin.astype(jnp.float32), h0, chunk=c)
+    else:
+        y, h = _chunk_scan(dt, b_mat, c_mat, a, xin, h0, c)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :] * xin.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * silu(z)
+    out = jnp.einsum("btd,dk->btk", y, params["out_proj"])
+    if return_cache:
+        return out, {"h": h, "conv": conv_state}
+    return out
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di = _d_inner(cfg)
+    return {
+        "h": jnp.zeros((batch, di, cfg.mamba.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba.conv_width - 1, di), dtype),
+    }
+
+
+def abstract_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di = _d_inner(cfg)
+    return {
+        "h": jax.ShapeDtypeStruct((batch, di, cfg.mamba.state_dim), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.mamba.conv_width - 1, di), dtype),
+    }
+
+
+def mamba_decode(
+    params: dict,
+    x_t: jnp.ndarray,  # (B,1,d)
+    cache: dict,
+    cfg: ModelConfig,
+) -> tuple[jnp.ndarray, dict]:
+    xz = jnp.einsum("btd,dk->btk", x_t, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, conv_state = _conv1d_causal(xin, params["conv_w"], params["conv_b"], cache["conv"])
+    xin = silu(xin)
+    dt, b_mat, c_mat, a = _ssm_inputs(params, xin, cfg)
+    da = jnp.exp(jnp.einsum("btd,dn->bdn", dt, a))  # t == 1
+    dbx = jnp.einsum("btd,btn->bdn", dt * xin.astype(jnp.float32), b_mat)
+    h = da * cache["h"] + dbx
+    y = jnp.einsum("bdn,btn->btd", h, c_mat)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :] * xin.astype(jnp.float32)
+    y = y.astype(x_t.dtype) * silu(z)
+    out = jnp.einsum("btd,dk->btk", y, params["out_proj"])
+    return out, {"h": h, "conv": conv_state}

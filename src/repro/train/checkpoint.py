@@ -1,0 +1,127 @@
+"""Distributed checkpointing through CFS (the paper's data plane).
+
+Checkpoints are the continuum hand-off object: the training executor
+saves state into CFS (immutable files + a snapshot pinning the exact
+revision set); a restarted — or entirely different — executor restores
+from the snapshot. Because CFS files are immutable and snapshots pin
+revisions, a checkpoint can never be half-overwritten: restart sees
+either the previous complete checkpoint or the new complete one.
+
+Async mode copies leaves to host synchronously (cheap) and uploads in a
+background thread, overlapping I/O with the next training steps.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..core.fs import CFSClient
+
+
+def _leaf_names(tree: Any) -> list[str]:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [jax.tree_util.keystr(p) for p, _ in paths]
+
+
+def _to_bytes(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+def _from_bytes(data: bytes) -> np.ndarray:
+    return np.load(io.BytesIO(data), allow_pickle=False)
+
+
+class CheckpointManager:
+    def __init__(self, cfs: CFSClient, colony: str, prefix: str = "/checkpoints", run: str = "run0"):
+        self.cfs = cfs
+        self.colony = colony
+        self.prefix = f"{prefix}/{run}"
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, state: Any, step: int, async_: bool = False) -> dict | None:
+        """Snapshot the full state pytree at ``step``."""
+        leaves = jax.tree.leaves(state)
+        names = _leaf_names(state)
+        host = [np.asarray(x) for x in leaves]  # device->host copy, synchronous
+
+        def upload() -> dict:
+            label = f"{self.prefix}/step-{step}"
+            manifest = {"step": step, "leaves": []}
+            for i, (name, arr) in enumerate(zip(names, host)):
+                fname = f"leaf-{i:05d}.npy"
+                self.cfs.upload_bytes(self.colony, label, fname, _to_bytes(arr))
+                manifest["leaves"].append(
+                    {"name": name, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+                )
+            self.cfs.upload_bytes(
+                self.colony, label, "manifest.json", json.dumps(manifest).encode()
+            )
+            snap = self.cfs.client.create_snapshot(
+                self.colony, label, f"ckpt-step-{step}", self.cfs.prvkey
+            )
+            # latest pointer — a new immutable revision, atomically visible
+            self.cfs.upload_bytes(
+                self.colony,
+                self.prefix,
+                "latest.json",
+                json.dumps({"step": step, "snapshotid": snap["snapshotid"]}).encode(),
+            )
+            return snap
+
+        if async_:
+            self.wait()  # only one in-flight save
+
+            def run() -> None:
+                try:
+                    upload()
+                except Exception as e:  # noqa: BLE001 — surfaced via wait()
+                    self._error = e
+
+            self._thread = threading.Thread(target=run, daemon=True)
+            self._thread.start()
+            return None
+        return upload()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        try:
+            data = self.cfs.download_bytes(self.colony, self.prefix, "latest.json")
+        except Exception:  # noqa: BLE001 — no checkpoint yet
+            return None
+        return json.loads(data)["step"]
+
+    def restore_latest(self, like: Any) -> tuple[Any, int] | None:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return self.restore(step, like), step
+
+    def restore(self, step: int, like: Any) -> Any:
+        label = f"{self.prefix}/step-{step}"
+        manifest = json.loads(self.cfs.download_bytes(self.colony, label, "manifest.json"))
+        leaves_like, treedef = jax.tree.flatten(like)
+        assert len(manifest["leaves"]) == len(leaves_like), "state structure changed"
+        out = []
+        for entry, ref in zip(manifest["leaves"], leaves_like):
+            arr = _from_bytes(self.cfs.download_bytes(self.colony, label, entry["file"]))
+            assert tuple(arr.shape) == tuple(ref.shape), (entry["name"], arr.shape, ref.shape)
+            out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+        return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,158 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+AdamW keeps fp32 first/second moments (the dominant memory term for the
+≥100B configs — which is why those configs can also select Adafactor's
+factored second moments). Updates are computed in fp32 and cast back to
+the parameter dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+
+
+def lr_schedule(tcfg: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    total = jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1)
+    progress = jnp.clip((step - tcfg.warmup_steps) / total, 0.0, 1.0)
+    cosine = 0.55 + 0.45 * jnp.cos(jnp.pi * progress)
+    return tcfg.learning_rate * warm * cosine
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(
+    params: Any, grads: Any, opt: dict, step: jnp.ndarray, tcfg: TrainConfig
+) -> tuple[Any, dict]:
+    lr = lr_schedule(tcfg, step)
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt["m"])
+    flat_v = treedef.flatten_up_to(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; used by the ≥100B configs)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape: tuple[int, ...]) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: Any) -> dict:
+    def init(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(init, params, is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def adafactor_update(
+    params: Any, grads: Any, opt: dict, step: jnp.ndarray, tcfg: TrainConfig
+) -> tuple[Any, dict]:
+    lr = lr_schedule(tcfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t**-0.8  # adafactor schedule
+    eps = 1e-30
+    d = tcfg.grad_clip if tcfg.grad_clip > 0 else 1.0
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p.shape):
+            vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            # u = g / (sqrt(vr/mean(vr)) ⊗ sqrt(vc)) — standard factored precond.
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps) + eps
+            )
+            cfac = jax.lax.rsqrt(vc + eps)
+            u = g * rfac[..., None] * cfac[..., None, :]
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vv = beta2 * v["v"] + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(vv + eps)
+            new_v = {"v": vv}
+        # update clipping (RMS <= d)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms / d)
+        scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))), 1e-3)
+        new_p = p.astype(jnp.float32) - lr * scale * u - lr * tcfg.weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype), new_v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(opt["v"])
+    out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    return treedef.unflatten([o[0] for o in out]), {
+        "v": treedef.unflatten([o[1] for o in out])
+    }
+
+
+def opt_init(params: Any, tcfg: TrainConfig) -> dict:
+    if tcfg.optimizer == "adafactor":
+        return adafactor_init(params)
+    return adamw_init(params)
+
+
+def opt_update(
+    params: Any, grads: Any, opt: dict, step: jnp.ndarray, tcfg: TrainConfig
+) -> tuple[Any, dict]:
+    if tcfg.optimizer == "adafactor":
+        return adafactor_update(params, grads, opt, step, tcfg)
+    return adamw_update(params, grads, opt, step, tcfg)

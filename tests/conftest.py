@@ -1,0 +1,43 @@
+import os
+import sys
+
+# smoke tests must see exactly 1 device (the dry-run sets 512 itself,
+# in a separate process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+from repro.core import Colonies, ColoniesServer, Crypto, InProcTransport, MemoryDatabase
+from repro.core.cluster import standalone_server
+
+
+@pytest.fixture(scope="session")
+def server_keys():
+    prv = Crypto.prvkey()
+    return prv, Crypto.id(prv)
+
+
+@pytest.fixture(scope="session")
+def colony_keys():
+    prv = Crypto.prvkey()
+    return prv, Crypto.id(prv)
+
+
+@pytest.fixture()
+def colony(server_keys, colony_keys):
+    """A standalone server with a registered 'dev' colony + SDK client."""
+    server_prv, server_id = server_keys
+    colony_prv, colony_id = colony_keys
+    srv = standalone_server(server_id)
+    client = Colonies(InProcTransport([srv]))
+    client.add_colony("dev", colony_id, server_prv)
+    yield {
+        "server": srv,
+        "client": client,
+        "server_prv": server_prv,
+        "colony_prv": colony_prv,
+        "name": "dev",
+    }
+    srv.stop()

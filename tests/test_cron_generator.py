@@ -1,0 +1,101 @@
+"""Cron (paper §3.4.3) and generators (paper §3.4.4)."""
+
+import time
+
+import pytest
+
+from repro.core import ExecutorBase
+from repro.core.cron import next_cron_deadline_ns
+from repro.core.errors import ValidationError
+
+
+WF = {
+    "colonyname": "dev",
+    "functionspecs": [
+        {"nodename": "tick", "funcname": "tick",
+         "conditions": {"executortype": "worker", "dependencies": []}}
+    ],
+}
+
+
+def test_cron_interval_fires(colony):
+    client, srv = colony["client"], colony["server"]
+    srv.start_background(failsafe_interval=0.05)
+    ran = []
+    ex = ExecutorBase(client, "dev", "cron-w", "worker", colony_prvkey=colony["colony_prv"])
+    ex.register_function("tick", lambda ctx, **kw: ran.append(1) or [1])
+    ex.start(poll_timeout=0.2)
+    c = client.add_cron(
+        {"colonyname": "dev", "name": "c1", "interval": 0.2, "workflow": WF},
+        colony["colony_prv"],
+    )
+    time.sleep(1.2)
+    ex.stop()
+    crons = client.get_crons("dev", colony["colony_prv"])
+    assert crons[0]["runs"] >= 3
+    assert len(ran) >= 3
+    client.remove_cron(c["cronid"], colony["colony_prv"])
+    assert client.get_crons("dev", colony["colony_prv"]) == []
+
+
+def test_cron_two_step_protocol_is_stateless(colony):
+    """Deadlines live in the table: a scan after the deadline fires exactly once."""
+    client, srv = colony["client"], colony["server"]
+    cron_ext = srv.extensions[0]
+    client.add_cron(
+        {"colonyname": "dev", "name": "c2", "interval": 0.1, "workflow": WF},
+        colony["colony_prv"],
+    )
+    assert cron_ext.tick() == 0  # deadline not reached yet
+    time.sleep(0.15)
+    assert cron_ext.tick() == 1  # fires
+    assert cron_ext.tick() == 0  # next deadline re-armed
+
+
+def test_cron_expression_parser():
+    # every minute
+    base = 1_700_000_000 * 10**9
+    nxt = next_cron_deadline_ns("* * * * *", base)
+    assert nxt > base and (nxt // 10**9) % 60 == 0
+    # */5 minutes
+    nxt5 = next_cron_deadline_ns("*/5 * * * *", base)
+    assert (nxt5 // 10**9 // 60) % 5 == 0
+    with pytest.raises(ValidationError):
+        next_cron_deadline_ns("* * *", base)  # wrong arity
+    with pytest.raises(ValidationError):
+        next_cron_deadline_ns("99 * * * *", base)  # out of range
+
+
+def test_generator_threshold(colony):
+    client, srv = colony["client"], colony["server"]
+    gen_ext = srv.extensions[1]
+    g = client.add_generator(
+        {"colonyname": "dev", "name": "g1", "queuesize": 3, "workflow": WF},
+        colony["colony_prv"],
+    )
+    client.pack(g["generatorid"], {"x": 1}, colony["colony_prv"])
+    client.pack(g["generatorid"], {"x": 2}, colony["colony_prv"])
+    assert gen_ext.tick() == 0  # below threshold
+    client.pack(g["generatorid"], {"x": 3}, colony["colony_prv"])
+    assert gen_ext.tick() == 1  # fires with all 3 args
+    procs = client.get_processes("dev", colony["colony_prv"], state="waiting")
+    tick_proc = [p for p in procs if p["spec"]["funcname"] == "tick"][-1]
+    packed = tick_proc["spec"]["kwargs"]["packed_args"]
+    assert packed == [{"x": 1}, {"x": 2}, {"x": 3}]
+    gens = client.get_generators("dev", colony["colony_prv"])
+    assert gens[0]["pending"] == 0 and gens[0]["runs"] == 1
+
+
+def test_generator_timeout_flush(colony):
+    """Below-threshold packs flush after the timeout (dynamic batching)."""
+    client, srv = colony["client"], colony["server"]
+    gen_ext = srv.extensions[1]
+    g = client.add_generator(
+        {"colonyname": "dev", "name": "g2", "queuesize": 100, "timeout": 0.2,
+         "workflow": WF},
+        colony["colony_prv"],
+    )
+    client.pack(g["generatorid"], "solo", colony["colony_prv"])
+    assert gen_ext.tick() == 0
+    time.sleep(0.25)
+    assert gen_ext.tick() == 1  # timeout flush

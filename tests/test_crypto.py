@@ -1,0 +1,61 @@
+"""Zero-trust crypto layer (paper §3.4.6)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.crypto import Crypto, N, Signature
+
+
+def test_sign_recover_roundtrip():
+    prv = Crypto.prvkey()
+    ident = Crypto.id(prv)
+    sig = Crypto.sign("hello world", prv)
+    assert Crypto.recover("hello world", sig) == ident
+    assert Crypto.verify("hello world", sig, ident)
+
+
+def test_different_message_fails():
+    prv = Crypto.prvkey()
+    sig = Crypto.sign("msg-a", prv)
+    assert not Crypto.verify("msg-b", sig, Crypto.id(prv))
+
+
+def test_tampered_signature_fails():
+    prv = Crypto.prvkey()
+    ident = Crypto.id(prv)
+    sig = Crypto.sign("payload", prv)
+    raw = bytearray(bytes.fromhex(sig))
+    raw[7] ^= 0xFF
+    assert not Crypto.verify("payload", raw.hex(), ident)
+
+
+def test_wrong_identity_fails():
+    prv1, prv2 = Crypto.prvkey(), Crypto.prvkey()
+    sig = Crypto.sign("payload", prv1)
+    assert not Crypto.verify("payload", sig, Crypto.id(prv2))
+
+
+def test_signature_is_deterministic():
+    """RFC6979 nonces: same (key, msg) -> same signature (stateless protocol)."""
+    prv = Crypto.prvkey()
+    assert Crypto.sign(b"x", prv) == Crypto.sign(b"x", prv)
+
+
+def test_signature_wire_format():
+    prv = Crypto.prvkey()
+    sig = Signature.from_hex(Crypto.sign(b"x", prv))
+    assert 1 <= sig.r < N and 1 <= sig.s <= N // 2 and sig.v in (0, 1)
+
+
+def test_malformed_signature_rejected():
+    with pytest.raises(ValueError):
+        Signature.from_hex("00" * 10)
+    assert not Crypto.verify(b"x", "00" * 65, "ab" * 32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.binary(min_size=0, max_size=200), st.integers(min_value=1, max_value=N - 1))
+def test_property_recover_matches_identity(msg, d):
+    prv = d.to_bytes(32, "big").hex()
+    sig = Crypto.sign(msg, prv)
+    assert Crypto.recover(msg, sig) == Crypto.id(prv)

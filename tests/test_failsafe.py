@@ -1,0 +1,93 @@
+"""The stateless maxexectime/maxwaittime failsafe (paper §3.4)."""
+
+import time
+
+import pytest
+
+from repro.core import Colonies, ExecutorBase, FunctionSpec, InProcTransport
+from repro.core.errors import ConflictError
+
+
+def spec(**kw):
+    d = {
+        "conditions": {"colonyname": "dev", "executortype": "worker"},
+        "funcname": "echo",
+    }
+    d.update(kw)
+    return FunctionSpec.from_dict(d)
+
+
+def test_expired_process_is_reset(colony):
+    """A crashed executor's process goes back to the queue (scale-down-by-kill)."""
+    client, srv = colony["client"], colony["server"]
+    ex = ExecutorBase(client, "dev", "w-crash", "worker", colony_prvkey=colony["colony_prv"])
+    p = client.submit(spec(maxexectime=1, maxretries=3), colony["colony_prv"])
+    # executor takes the process... and vanishes without closing
+    pd = client.assign("dev", 2.0, ex.prvkey)
+    assert pd["processid"] == p["processid"]
+    assert client.get_process(p["processid"], colony["colony_prv"])["state"] == "running"
+    time.sleep(1.1)
+    counters = srv.failsafe_scan()
+    assert counters["reset"] == 1
+    reset = client.get_process(p["processid"], colony["colony_prv"])
+    assert reset["state"] == "waiting" and reset["retries"] == 1
+    # a healthy executor picks it up and completes
+    ex2 = ExecutorBase(client, "dev", "w-heal", "worker", colony_prvkey=colony["colony_prv"])
+    ex2.register_function("echo", lambda ctx: ["recovered"])
+    assert ex2.step(2.0)
+    done = client.get_process(p["processid"], colony["colony_prv"])
+    assert done["state"] == "successful" and done["out"] == ["recovered"]
+
+
+def test_maxretries_exhausted_fails(colony):
+    client, srv = colony["client"], colony["server"]
+    ex = ExecutorBase(client, "dev", "w-mr", "worker", colony_prvkey=colony["colony_prv"])
+    p = client.submit(spec(maxexectime=1, maxretries=0), colony["colony_prv"])
+    client.assign("dev", 2.0, ex.prvkey)
+    time.sleep(1.1)
+    counters = srv.failsafe_scan()
+    assert counters["failed"] == 1
+    done = client.get_process(p["processid"], colony["colony_prv"])
+    assert done["state"] == "failed" and "maxretries" in done["errors"][0]
+
+
+def test_stale_executor_close_rejected(colony):
+    """Paper §4.1: 'The previous executor then receives an error when trying
+    to send a close request' after the failsafe re-assigned its process."""
+    client, srv = colony["client"], colony["server"]
+    ex1 = ExecutorBase(client, "dev", "w-slow", "worker", colony_prvkey=colony["colony_prv"])
+    p = client.submit(spec(maxexectime=1, maxretries=3), colony["colony_prv"])
+    pd = client.assign("dev", 2.0, ex1.prvkey)
+    time.sleep(1.1)
+    srv.failsafe_scan()  # lease expired -> back to queue
+    ex2 = ExecutorBase(client, "dev", "w-fast", "worker", colony_prvkey=colony["colony_prv"])
+    pd2 = client.assign("dev", 2.0, ex2.prvkey)
+    assert pd2["processid"] == p["processid"]
+    with pytest.raises(ConflictError):
+        client.close(p["processid"], ["stale result"], ex1.prvkey)
+    client.close(p["processid"], ["fresh result"], ex2.prvkey)
+    assert client.get_process(p["processid"], colony["colony_prv"])["out"] == ["fresh result"]
+
+
+def test_maxwaittime_expires_queued_process(colony):
+    client, srv = colony["client"], colony["server"]
+    p = client.submit(spec(maxwaittime=1), colony["colony_prv"])
+    time.sleep(1.1)
+    counters = srv.failsafe_scan()
+    assert counters["waitexpired"] == 1
+    done = client.get_process(p["processid"], colony["colony_prv"])
+    assert done["state"] == "failed" and "maxwaittime" in done["errors"][0]
+
+
+def test_background_scanner_recovers_without_manual_scan(colony):
+    client, srv = colony["client"], colony["server"]
+    srv.start_background(failsafe_interval=0.1)
+    ex = ExecutorBase(client, "dev", "w-bg", "worker", colony_prvkey=colony["colony_prv"])
+    p = client.submit(spec(maxexectime=1, maxretries=2), colony["colony_prv"])
+    client.assign("dev", 2.0, ex.prvkey)  # take it and vanish
+    deadline = time.time() + 5
+    while time.time() < deadline:
+        if client.get_process(p["processid"], colony["colony_prv"])["state"] == "waiting":
+            break
+        time.sleep(0.05)
+    assert client.get_process(p["processid"], colony["colony_prv"])["state"] == "waiting"

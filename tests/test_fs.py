@@ -1,0 +1,100 @@
+"""CFS meta-filesystem (paper §3.4.5): immutability, snapshots, sync."""
+
+import os
+
+import pytest
+
+from repro.core.errors import ConflictError, NotFoundError
+from repro.core.fs import CFSClient, LocalStorage, MemoryStorage, checksum
+
+
+@pytest.fixture()
+def cfs(colony):
+    return CFSClient(colony["client"], MemoryStorage(), colony["colony_prv"])
+
+
+def test_upload_download_roundtrip(colony, cfs):
+    cfs.upload_bytes("dev", "/data", "a.bin", b"\x00\x01\x02")
+    assert cfs.download_bytes("dev", "/data", "a.bin") == b"\x00\x01\x02"
+
+
+def test_immutability_revisions(colony, cfs):
+    """Re-adding a file creates a new revision; old bytes stay retrievable."""
+    m1 = cfs.upload_bytes("dev", "/src", "f.txt", b"v1")
+    m2 = cfs.upload_bytes("dev", "/src", "f.txt", b"v2")
+    assert m2["revision"] == m1["revision"] + 1
+    assert cfs.download_bytes("dev", "/src", "f.txt") == b"v2"  # latest wins
+    # the v1 blob still exists (content-addressed, immutable)
+    assert cfs.storage.get(m1["storage"]["url"]) == b"v1"
+
+
+def test_checksum_validation(colony, cfs):
+    meta = cfs.upload_bytes("dev", "/src", "c.txt", b"data")
+    assert meta["checksum"] == checksum(b"data")
+    # corrupt the blob behind CFS's back -> download must fail
+    key = meta["storage"]["url"].split("://")[1]
+    cfs.storage._blobs[key] = b"tampered"
+    with pytest.raises(ConflictError):
+        cfs.download_bytes("dev", "/src", "c.txt")
+
+
+def test_snapshot_pins_revisions(colony, cfs, tmp_path):
+    """Queued processes must see frozen inputs (paper: snapshots)."""
+    client = colony["client"]
+    cfs.upload_bytes("dev", "/code", "main.py", b"print(1)")
+    snap = client.create_snapshot("dev", "/code", "s1", colony["colony_prv"])
+    cfs.upload_bytes("dev", "/code", "main.py", b"print(2)")  # later revision
+    out = tmp_path / "snap"
+    cfs.materialize_snapshot("dev", snap["snapshotid"], str(out))
+    assert (out / "main.py").read_bytes() == b"print(1)"
+    assert cfs.download_bytes("dev", "/code", "main.py") == b"print(2)"
+
+
+def test_pinned_revision_cannot_be_removed(colony, cfs):
+    client = colony["client"]
+    meta = cfs.upload_bytes("dev", "/pin", "x.bin", b"x")
+    client.create_snapshot("dev", "/pin", "s", colony["colony_prv"])
+    with pytest.raises(ConflictError):
+        client._rpc(
+            "removefile", {"colonyname": "dev", "fileid": meta["fileid"]},
+            colony["colony_prv"],
+        )
+
+
+def test_dir_sync_roundtrip(colony, cfs, tmp_path):
+    src = tmp_path / "up"
+    (src / "sub").mkdir(parents=True)
+    (src / "a.txt").write_bytes(b"alpha")
+    (src / "sub" / "b.txt").write_bytes(b"beta")
+    cfs.sync_up("dev", "/tree", str(src))
+    dst = tmp_path / "down"
+    cfs.sync_down("dev", "/tree", str(dst))
+    assert (dst / "a.txt").read_bytes() == b"alpha"
+    assert (dst / "sub" / "b.txt").read_bytes() == b"beta"
+
+
+def test_local_storage_backend(tmp_path):
+    store = LocalStorage(str(tmp_path / "blobs"))
+    url = store.put(b"payload")
+    assert url.startswith("local://")
+    assert store.get(url) == b"payload"
+    # content-addressed: same content, same blob
+    assert store.put(b"payload") == url
+    with pytest.raises(NotFoundError):
+        store.get("local://" + "0" * 64)
+
+
+def test_missing_file(colony, cfs):
+    with pytest.raises(NotFoundError):
+        cfs.download_bytes("dev", "/nope", "missing.txt")
+
+
+def test_snapshot_listing_and_removal(colony, cfs):
+    client = colony["client"]
+    cfs.upload_bytes("dev", "/s2", "f", b"z")
+    snap = client.create_snapshot("dev", "/s2", "tmp", colony["colony_prv"])
+    got = client.get_snapshot("dev", snap["snapshotid"], colony["colony_prv"])
+    assert got["files"][0]["name"] == "f"
+    client.remove_snapshot("dev", snap["snapshotid"], colony["colony_prv"])
+    with pytest.raises(NotFoundError):
+        client.get_snapshot("dev", snap["snapshotid"], colony["colony_prv"])

@@ -1,0 +1,110 @@
+"""HTTP transport (long-poll) and the HA Raft cluster end-to-end."""
+
+import time
+
+import pytest
+
+from repro.core import Colonies, Crypto, ExecutorBase, FunctionSpec, InProcTransport
+from repro.core.cluster import HAColonyCluster
+from repro.core.http_transport import ColoniesHttpServer, HttpTransport
+
+
+def spec(**kw):
+    d = {"conditions": {"colonyname": "dev", "executortype": "worker"},
+         "funcname": "echo", "maxexectime": 60}
+    d.update(kw)
+    return FunctionSpec.from_dict(d)
+
+
+def test_http_end_to_end(colony):
+    http = ColoniesHttpServer(colony["server"])
+    http.start()
+    try:
+        client = Colonies(HttpTransport(http.host, http.port))
+        ex = ExecutorBase(client, "dev", "http-w", "worker",
+                          colony_prvkey=colony["colony_prv"])
+        ex.register_function("echo", lambda ctx, *a: list(a))
+        p = client.submit(spec(args=["over-http"]), colony["colony_prv"])
+        assert ex.step(2.0)
+        done = client.wait(p["processid"], colony["colony_prv"], timeout=5)
+        assert done["out"] == ["over-http"]
+    finally:
+        http.stop()
+
+
+def test_http_health_and_bad_request(colony):
+    import json
+    import urllib.request
+
+    http = ColoniesHttpServer(colony["server"])
+    http.start()
+    try:
+        with urllib.request.urlopen(
+            f"http://{http.host}:{http.port}/health", timeout=5
+        ) as r:
+            assert json.loads(r.read())["status"] == "ok"
+        req = urllib.request.Request(
+            f"http://{http.host}:{http.port}/api", data=b"not json", method="POST"
+        )
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req, timeout=5)
+        assert ei.value.code == 400
+    finally:
+        http.stop()
+
+
+def test_ha_cluster_failover(server_keys, colony_keys):
+    """Fig. 3: kill the leader replica; assigns keep working via failover,
+    and every process is assigned exactly once (raft-serialized)."""
+    server_prv, server_id = server_keys
+    colony_prv, colony_id = colony_keys
+    cluster = HAColonyCluster(server_id, replicas=3, seed=11)
+    cluster.start(failsafe_interval=0.1)
+    try:
+        assert cluster.wait_for_leader(10)
+        client = Colonies(InProcTransport(cluster.servers))
+        client.add_colony("dev", colony_id, server_prv)
+        ex = ExecutorBase(client, "dev", "ha-w", "worker", colony_prvkey=colony_prv)
+        ex.register_function("echo", lambda ctx, *a: list(a))
+        ex.start(poll_timeout=0.3)
+
+        p1 = client.submit(spec(args=[1]), colony_prv)
+        assert client.wait(p1["processid"], colony_prv, timeout=10)["state"] == "successful"
+
+        lid = cluster.raft.leader_id()
+        cluster.kill_server(int(lid[1:]))
+        p2 = client.submit(spec(args=[2]), colony_prv)
+        done = client.wait(p2["processid"], colony_prv, timeout=20)
+        assert done["state"] == "successful"
+        assert cluster.raft.leader_id() != lid
+        ex.stop()
+    finally:
+        cluster.stop()
+
+
+def test_ha_exactly_once_assignment(server_keys, colony_keys):
+    """Two executors racing on the same queue never get the same process."""
+    server_prv, server_id = server_keys
+    colony_prv, colony_id = colony_keys
+    cluster = HAColonyCluster(server_id, replicas=3, seed=12)
+    cluster.start(failsafe_interval=0.2)
+    try:
+        assert cluster.wait_for_leader(10)
+        client = Colonies(InProcTransport(cluster.servers))
+        client.add_colony("dev", colony_id, server_prv)
+        seen: list[str] = []
+        ex1 = ExecutorBase(client, "dev", "race-1", "worker", colony_prvkey=colony_prv)
+        ex2 = ExecutorBase(client, "dev", "race-2", "worker", colony_prvkey=colony_prv)
+        for ex in (ex1, ex2):
+            ex.register_function("echo", lambda ctx, pid: seen.append(pid) or [pid])
+            ex.start(poll_timeout=0.3)
+        pids = []
+        for i in range(6):
+            p = client.submit(spec(args=[f"p{i}"]), colony_prv)
+            pids.append(p["processid"])
+        for pid in pids:
+            assert client.wait(pid, colony_prv, timeout=20)["state"] == "successful"
+        ex1.stop(); ex2.stop()
+        assert sorted(seen) == sorted(f"p{i}" for i in range(6))  # no dups
+    finally:
+        cluster.stop()

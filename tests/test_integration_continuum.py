@@ -1,0 +1,108 @@
+"""End-to-end compute-continuum test — the paper's whole story in one DAG:
+
+  prepare_data (edge executor) -> train (tpu-pod, chaos-crashed mid-run,
+  failsafe re-assigns, training resumes from the CFS checkpoint) ->
+  evaluate -> results visible to the user.
+
+Plus the §Discussion scenario: train on one platform, CFS-sync the model,
+serve it on another.
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Colonies, ExecutorBase, WorkflowSpec
+from repro.core.fs import CFSClient, MemoryStorage
+from repro.runtime.jax_executor import DataExecutor, ServeExecutor, TrainerExecutor
+
+
+@pytest.fixture()
+def storage():
+    return MemoryStorage()
+
+
+def test_full_pipeline_with_executor_crash(colony, storage):
+    client, srv = colony["client"], colony["server"]
+    srv.start_background(failsafe_interval=0.1)
+
+    data_ex = DataExecutor(client, "dev", "edge-1", "edge-data", storage,
+                           colony_prvkey=colony["colony_prv"])
+    # BOTH trainers die at step 3 on their first assignment (simulated
+    # crash; the process is never closed), so whichever wins the race
+    # crashes exactly once; die_at_step clears after the crash, so the
+    # post-failsafe re-assignment completes. maxretries=3 > worst case 2.
+    trainer_a = TrainerExecutor(client, "dev", "tpu-a", "tpu-pod", storage,
+                                colony_prvkey=colony["colony_prv"], die_at_step=3)
+    trainer_b = TrainerExecutor(client, "dev", "tpu-b", "tpu-pod", storage,
+                                colony_prvkey=colony["colony_prv"], die_at_step=3)
+    for ex in (data_ex, trainer_a, trainer_b):
+        ex.start(poll_timeout=0.2)
+
+    wf = WorkflowSpec.from_dict({
+        "colonyname": "dev",
+        "functionspecs": [
+            {"nodename": "prep", "funcname": "prepare_data",
+             "kwargs": {"shards": 2, "tokens_per_shard": 256},
+             "conditions": {"executortype": "edge-data", "dependencies": []},
+             "maxexectime": 30},
+            {"nodename": "train", "funcname": "train",
+             "kwargs": {"arch": "stablelm-3b", "steps": 4, "batch": 2,
+                        "seq_len": 16, "checkpoint_every": 1, "run": "itest"},
+             # lease must exceed one attempt's compile+steps (~10s on CPU);
+             # crash detection latency = remaining lease after the crash
+             "conditions": {"executortype": "tpu-pod", "dependencies": ["prep"]},
+             "maxexectime": 60, "maxretries": 5},
+            {"nodename": "eval", "funcname": "evaluate",
+             "kwargs": {"arch": "stablelm-3b", "batch": 2, "seq_len": 16,
+                        "run": "itest"},
+             "conditions": {"executortype": "tpu-pod", "dependencies": ["train"]},
+             "maxexectime": 30},
+        ],
+    })
+    r = client.submit_workflow(wf, colony["colony_prv"])
+    procs = {p["spec"]["nodename"]: p for p in r["processes"]}
+    done = client.wait(procs["eval"]["processid"], colony["colony_prv"], timeout=300)
+    for ex in (data_ex, trainer_a, trainer_b):
+        ex.stop()
+
+    assert done["state"] == "successful", done["errors"]
+    assert np.isfinite(done["out"][0]["eval_ce"])
+    train_p = client.get_process(procs["train"]["processid"], colony["colony_prv"])
+    assert train_p["state"] == "successful"
+    assert train_p["retries"] >= 1, "chaos crash should have consumed a retry"
+    assert train_p["out"][0]["final_step"] == 3
+    # one of the trainers really did take (and lose) the process first
+    assert trainer_a.failed + trainer_b.failed >= 1
+
+
+def test_train_then_serve_handoff(colony, storage):
+    """§Discussion: 'train a ML model on an HPC system, then use CFS to
+    synchronize the trained model to a cloud environment'."""
+    client, srv = colony["client"], colony["server"]
+    srv.start_background(failsafe_interval=0.1)
+    trainer = TrainerExecutor(client, "dev", "hpc-1", "tpu-pod", storage,
+                              colony_prvkey=colony["colony_prv"])
+    trainer.start(poll_timeout=0.2)
+    from repro.core import FunctionSpec
+
+    p = client.submit(FunctionSpec.from_dict({
+        "conditions": {"colonyname": "dev", "executortype": "tpu-pod"},
+        "funcname": "train",
+        "kwargs": {"arch": "stablelm-3b", "steps": 4, "batch": 2, "seq_len": 16,
+                   "checkpoint_every": 2, "run": "handoff"},
+        "maxexectime": 60,
+    }), colony["colony_prv"])
+    done = client.wait(p["processid"], colony["colony_prv"], timeout=120)
+    trainer.stop()
+    assert done["state"] == "successful"
+
+    # "cloud" executor boots from the CFS checkpoint the trainer wrote
+    server = ServeExecutor(client, "dev", "cloud-1", "tpu-serve", storage,
+                           colony_prvkey=colony["colony_prv"],
+                           arch="stablelm-3b", max_len=64, run="handoff")
+    prompts = np.zeros((1, 4), np.int32)
+    out = server.engine.generate(prompts, max_new_tokens=3)
+    assert out.shape == (1, 3)

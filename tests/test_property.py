@@ -1,0 +1,129 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Crypto, FunctionSpec, MemoryDatabase, SqliteDatabase
+from repro.core.process import PRIORITY_NS_PER_LEVEL, Process, priority_time
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1) priority-time ordering
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 10**18), st.integers(0, 5)),
+        min_size=2, max_size=20,
+    )
+)
+def test_priority_dominates_within_a_day(subs):
+    """A process with priority p+1 submitted within 24h of a priority-p
+    process always sorts ahead of it (Eq. 1: one level == one day)."""
+    for ts, pr in subs:
+        later = ts + PRIORITY_NS_PER_LEVEL - 1  # < one day later
+        assert priority_time(later, pr + 1) < priority_time(ts, pr)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 10**15), st.integers(0, 3)), min_size=1, max_size=12))
+def test_db_backends_agree_on_queue_order(subs):
+    """MemoryDatabase and SqliteDatabase pop candidates in the same order."""
+    dbs = [MemoryDatabase(), SqliteDatabase()]
+    procs = []
+    for i, (ts, pr) in enumerate(subs):
+        spec = FunctionSpec.from_dict({
+            "conditions": {"colonyname": "c", "executortype": "w"},
+            "funcname": "f", "priority": pr,
+        })
+        p = Process.create(spec, submission_ns=ts * 1000 + i)  # unique ts
+        procs.append(p)
+    orders = []
+    for db in dbs:
+        for p in procs:
+            db.add_process(Process.from_dict(p.to_dict()))
+        order = [q.processid for q in db.candidates("c", "w", "any", limit=50)]
+        orders.append(order)
+    assert orders[0] == orders[1]
+    # and the order is exactly ascending priority_time
+    want = [p.processid for p in sorted(procs, key=lambda p: (p.priority_time, p.processid))]
+    got_sorted = sorted(orders[0], key=lambda pid: want.index(pid))
+    # candidates returns priority_time order; ties (same pt) may differ by id
+    pts = {p.processid: p.priority_time for p in procs}
+    assert [pts[x] for x in orders[0]] == sorted(pts[x] for x in orders[0])
+
+
+# ---------------------------------------------------------------------------
+# process serialization
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(0, 10**18), st.integers(0, 5),
+    st.integers(-1, 1000), st.integers(0, 9),
+    st.text(st.characters(codec="ascii", exclude_characters='\x00'), max_size=20),
+)
+def test_process_json_roundtrip(ts, pr, mexec, retries, fname):
+    spec = FunctionSpec.from_dict({
+        "conditions": {"colonyname": "c", "executortype": "w"},
+        "funcname": fname, "priority": pr, "maxexectime": mexec,
+    })
+    p = Process.create(spec, submission_ns=ts)
+    p.retries = retries
+    q = Process.from_json(p.to_json())
+    assert q.to_dict() == p.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer invariants
+# ---------------------------------------------------------------------------
+
+_HLO_TEMPLATE = """
+HloModule test
+
+%body (p: (s32[], f32[{n},{n}])) -> (s32[], f32[{n},{n}]) {{
+  %p = (s32[], f32[{n},{n}]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[{n},{n}] get-tuple-element(%p), index=1
+  %d = f32[{n},{n}] dot(%g1, %g1), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+  %c1 = s32[] constant(1)
+  %a = s32[] add(%g0, %c1)
+  ROOT %t = (s32[], f32[{n},{n}]) tuple(%a, %d)
+}}
+
+%cond (p: (s32[], f32[{n},{n}])) -> pred[] {{
+  %p = (s32[], f32[{n},{n}]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant({trips})
+  ROOT %lt = pred[] compare(%g0, %lim), direction=LT
+}}
+
+ENTRY %main (x: f32[{n},{n}]) -> f32[{n},{n}] {{
+  %x = f32[{n},{n}] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[{n},{n}]) tuple(%zero, %x)
+  %w = (s32[], f32[{n},{n}]) while(%init), condition=%cond, body=%body, backend_config={{"known_trip_count":{{"n":"{trips}"}}}}
+  ROOT %out = f32[{n},{n}] get-tuple-element(%w), index=1
+}}
+"""
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]), trips=st.integers(1, 64))
+def test_hlo_loop_scaling_is_linear(n, trips):
+    """dot flops inside a while body scale exactly by the trip count."""
+    a1 = analyze_hlo(_HLO_TEMPLATE.format(n=n, trips=trips))
+    a2 = analyze_hlo(_HLO_TEMPLATE.format(n=n, trips=2 * trips))
+    assert a1["dot_flops"] == 2.0 * n * n * n * trips
+    assert a2["dot_flops"] == 2.0 * a1["dot_flops"]
+
+
+def test_crypto_identity_is_stable():
+    prv = Crypto.prvkey()
+    assert Crypto.id(prv) == Crypto.id(prv)
+    assert len(Crypto.id(prv)) == 64  # SHA3-256 hex

@@ -1,0 +1,108 @@
+"""Raft consensus (paper §3.4.1): elections, failover, log safety."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.raft import LEADER, SimRaftCluster
+
+
+def test_single_leader_elected():
+    sim = SimRaftCluster(3, seed=1)
+    leader = sim.run_until_leader()
+    assert leader is not None
+    assert len(sim.leaders()) == 1
+
+
+def test_failover_elects_new_leader():
+    sim = SimRaftCluster(3, seed=2)
+    l1 = sim.run_until_leader()
+    sim.kill(l1)
+    for _ in range(600):
+        sim.step()
+        fresh = [l for l in sim.leaders() if l != l1]
+        if fresh:
+            break
+    assert fresh, "no new leader after killing the old one"
+
+
+def test_partitioned_leader_steps_down():
+    """Check-quorum: a leader cut off from the majority must not keep
+    serving assigns (it would double-assign)."""
+    sim = SimRaftCluster(3, seed=3)
+    l1 = sim.run_until_leader()
+    sim.kill(l1)
+    for _ in range(800):
+        sim.step()
+    assert not sim.nodes[l1].is_leader(), "stale leader kept leadership"
+
+
+def test_heal_rejoins_cluster():
+    sim = SimRaftCluster(3, seed=4)
+    l1 = sim.run_until_leader()
+    sim.kill(l1)
+    for _ in range(600):
+        sim.step()
+    sim.revive(l1)
+    for _ in range(600):
+        sim.step()
+    leaders = sim.leaders()
+    assert len(leaders) == 1
+    # the revived node recognises the current term's leader
+    terms = {n.current_term for n in sim.nodes.values()}
+    assert len(terms) == 1
+
+
+def test_log_replication_and_apply():
+    applied: dict[str, list] = {}
+    sim = SimRaftCluster(
+        3, apply_fn=lambda nid, e, i: applied.setdefault(nid, []).append((i, e["v"])),
+        seed=5,
+    )
+    leader = sim.run_until_leader()
+    for v in range(5):
+        assert sim.nodes[leader].propose({"v": v}) is not None
+        for _ in range(20):
+            sim.step()
+    # all nodes applied the same sequence
+    seqs = {nid: tuple(v) for nid, v in applied.items()}
+    assert len(seqs) == 3
+    assert len(set(seqs.values())) == 1
+    assert [v for _, v in applied[leader]] == [0, 1, 2, 3, 4]
+
+
+def test_committed_entries_survive_failover():
+    applied: dict[str, list] = {}
+    sim = SimRaftCluster(
+        3, apply_fn=lambda nid, e, i: applied.setdefault(nid, []).append(e["v"]),
+        seed=6,
+    )
+    l1 = sim.run_until_leader()
+    sim.nodes[l1].propose({"v": "committed"})
+    for _ in range(60):
+        sim.step()
+    sim.kill(l1)
+    for _ in range(800):
+        sim.step()
+    l2 = [l for l in sim.leaders() if l != l1]
+    assert l2, "no new leader"
+    sim.nodes[l2[0]].propose({"v": "after-failover"})
+    for _ in range(60):
+        sim.step()
+    assert applied[l2[0]] == ["committed", "after-failover"]
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    drop=st.floats(0.0, 0.3),
+)
+def test_property_election_safety_under_message_loss(seed, drop):
+    """At most one leader per term, even with lossy links."""
+    sim = SimRaftCluster(5, seed=seed)
+    sim.net.drop_prob = drop
+    leaders_by_term: dict[int, set[str]] = {}
+    for _ in range(400):
+        sim.step()
+        for term, ls in sim.leaders_of_term().items():
+            leaders_by_term.setdefault(term, set()).update(ls)
+    for term, ls in leaders_by_term.items():
+        assert len(ls) <= 1, f"two leaders in term {term}: {ls}"

@@ -1,0 +1,115 @@
+"""Zero-trust enforcement (paper §3.4.6, Table 5): three roles, always verify."""
+
+import pytest
+
+from repro.core import Colonies, Crypto, ExecutorBase, FunctionSpec, InProcTransport
+from repro.core.errors import AuthError
+from repro.core.security import open_envelope, sign_envelope
+
+
+def spec():
+    return FunctionSpec.from_dict(
+        {"conditions": {"colonyname": "dev", "executortype": "worker"},
+         "funcname": "echo"}
+    )
+
+
+def test_only_server_owner_creates_colonies(colony):
+    rando = Crypto.prvkey()
+    with pytest.raises(AuthError):
+        colony["client"].add_colony("rogue", Crypto.id(rando), rando)
+
+
+def test_only_colony_owner_registers_executors(colony):
+    rando = Crypto.prvkey()
+    with pytest.raises(AuthError):
+        colony["client"].add_executor(
+            {"executorname": "evil", "executorid": Crypto.id(rando),
+             "colonyname": "dev", "executortype": "worker"},
+            rando,
+        )
+
+
+def test_unapproved_executor_cannot_assign(colony):
+    """Table 5: membership requires owner approval, not just registration."""
+    client = colony["client"]
+    prv = Crypto.prvkey()
+    client.add_executor(
+        {"executorname": "pending-w", "executorid": Crypto.id(prv),
+         "colonyname": "dev", "executortype": "worker"},
+        colony["colony_prv"],
+    )
+    with pytest.raises(AuthError):
+        client.assign("dev", 0.2, prv)
+    client.approve_executor(Crypto.id(prv), colony["colony_prv"])
+    client.submit(spec(), colony["colony_prv"])
+    assert client.assign("dev", 2.0, prv)["spec"]["funcname"] == "echo"
+
+
+def test_rejected_executor_is_locked_out(colony):
+    client = colony["client"]
+    prv = Crypto.prvkey()
+    client.add_executor(
+        {"executorname": "rej-w", "executorid": Crypto.id(prv),
+         "colonyname": "dev", "executortype": "worker"},
+        colony["colony_prv"],
+    )
+    client.reject_executor(Crypto.id(prv), colony["colony_prv"])
+    with pytest.raises(AuthError):
+        client.assign("dev", 0.2, prv)
+
+
+def test_non_member_cannot_submit_or_read(colony):
+    outsider = Crypto.prvkey()
+    with pytest.raises(AuthError):
+        colony["client"].submit(spec(), outsider)
+    with pytest.raises(AuthError):
+        colony["client"].stats("dev", outsider)
+
+
+def test_only_assigned_executor_can_close(colony):
+    """Fig. 2: only the assigned executor has write access to the process."""
+    client = colony["client"]
+    ex1 = ExecutorBase(client, "dev", "sec-1", "worker", colony_prvkey=colony["colony_prv"])
+    ex2 = ExecutorBase(client, "dev", "sec-2", "worker", colony_prvkey=colony["colony_prv"])
+    p = client.submit(spec(), colony["colony_prv"])
+    pd = client.assign("dev", 2.0, ex1.prvkey)
+    from repro.core.errors import ConflictError
+
+    with pytest.raises(ConflictError):
+        client.close(pd["processid"], ["hijack"], ex2.prvkey)
+    client.close(pd["processid"], ["ok"], ex1.prvkey)
+
+
+def test_envelope_tamper_detected():
+    """Tampering changes the RECOVERED identity (never the signer's), so
+    the tamperer gains no authority — the zero-trust property."""
+    prv = Crypto.prvkey()
+    ident = Crypto.id(prv)
+    env = sign_envelope("submit", {"a": 1}, prv)
+    env["payload"] = env["payload"].replace("1", "2")
+    try:
+        recovered, _, _ = open_envelope(env)
+        assert recovered != ident
+    except AuthError:
+        pass  # outright rejection is also acceptable
+
+
+def test_envelope_type_tamper_detected():
+    """Signature binds the payload TYPE too (no cross-operation replay)."""
+    prv = Crypto.prvkey()
+    ident = Crypto.id(prv)
+    env = sign_envelope("getprocess", {"processid": "x"}, prv)
+    env["payloadtype"] = "removeexecutor"
+    recovered, _, _ = open_envelope(env)
+    assert recovered != ident  # recovers a DIFFERENT identity -> no authority
+
+
+def test_user_role_can_submit_but_not_assign(colony):
+    client = colony["client"]
+    user_prv = Crypto.prvkey()
+    client.add_user("dev", Crypto.id(user_prv), "alice", colony["colony_prv"])
+    p = client.submit(spec(), user_prv)  # members may submit
+    assert p["state"] == "waiting"
+    with pytest.raises(AuthError):  # but users are not executors
+        client.assign("dev", 0.2, user_prv)

@@ -1,0 +1,151 @@
+"""Broker behaviour: process table as queue, Eq. (1) priority, matching."""
+
+import time
+
+import pytest
+
+from repro.core import Colonies, Crypto, ExecutorBase, FunctionSpec, InProcTransport
+from repro.core.errors import AuthError, TimeoutError_, ValidationError
+from repro.core.process import PRIORITY_NS_PER_LEVEL, Process, priority_time
+
+
+def spec(colony="dev", etype="worker", func="echo", **kw):
+    d = {
+        "conditions": {"colonyname": colony, "executortype": etype},
+        "funcname": func,
+        "maxexectime": 60,
+    }
+    d.update(kw)
+    return FunctionSpec.from_dict(d)
+
+
+def make_executor(colony, name="w1", etype="worker"):
+    ex = ExecutorBase(
+        colony["client"], colony["name"], name, etype, colony_prvkey=colony["colony_prv"]
+    )
+    ex.register_function("echo", lambda ctx, *a: list(a))
+    return ex
+
+
+def test_submit_assign_close(colony):
+    client = colony["client"]
+    ex = make_executor(colony)
+    p = client.submit(spec(args=["hi"]), colony["colony_prv"])
+    assert p["state"] == "waiting"
+    assert ex.step(timeout=2.0)
+    done = client.get_process(p["processid"], colony["colony_prv"])
+    assert done["state"] == "successful" and done["out"] == ["hi"]
+
+
+def test_priority_time_equation():
+    """Eq. (1): priority_time = submission_ns - priority * 1e9*60*60*24."""
+    ts = 1_679_906_715_352_024_000
+    assert priority_time(ts, 0) == ts
+    assert priority_time(ts, 1) == ts - PRIORITY_NS_PER_LEVEL
+    assert priority_time(ts, 5) == ts - 5 * PRIORITY_NS_PER_LEVEL
+
+
+def test_priority_ordering(colony):
+    """Higher-priority processes are assigned first despite later submission."""
+    client = colony["client"]
+    ex = make_executor(colony, name="w-prio")
+    low = client.submit(spec(args=["low"], priority=0), colony["colony_prv"])
+    high = client.submit(spec(args=["high"], priority=2), colony["colony_prv"])
+    order = []
+    ex._handlers["echo"] = lambda ctx, tag: order.append(tag) or [tag]
+    assert ex.step(2.0) and ex.step(2.0)
+    assert order == ["high", "low"]
+
+
+def test_fifo_within_priority(colony):
+    client = colony["client"]
+    ex = make_executor(colony, name="w-fifo")
+    ids = [client.submit(spec(args=[i]), colony["colony_prv"])["processid"] for i in range(3)]
+    got = []
+    ex._handlers["echo"] = lambda ctx, i: got.append(i) or [i]
+    for _ in range(3):
+        assert ex.step(2.0)
+    assert got == [0, 1, 2]
+
+
+def test_executor_type_matching(colony):
+    """Processes only go to executors of the matching type."""
+    client = colony["client"]
+    ex_b = make_executor(colony, name="w-b", etype="other")
+    p = client.submit(spec(etype="worker"), colony["colony_prv"])
+    assert not ex_b.step(timeout=0.3)  # other-type executor never gets it
+    ex_a = make_executor(colony, name="w-a", etype="worker")
+    assert ex_a.step(timeout=2.0)
+
+
+def test_targeted_executornames(colony):
+    """Fine-grained assignment: pin a process to one executor by name
+    (the paper's argument for database-backed queues)."""
+    client = colony["client"]
+    ex1 = make_executor(colony, name="target-1")
+    ex2 = make_executor(colony, name="target-2")
+    s = spec(args=["pinned"])
+    s.conditions.executornames = ["target-2"]
+    p = client.submit(s, colony["colony_prv"])
+    assert not ex1.step(timeout=0.3)
+    assert ex2.step(timeout=2.0)
+    done = client.get_process(p["processid"], colony["colony_prv"])
+    assert done["assignedexecutorid"] == ex2.executorid
+
+
+def test_assign_timeout(colony):
+    ex = make_executor(colony, name="w-idle")
+    t0 = time.time()
+    with pytest.raises(TimeoutError_):
+        colony["client"].assign(colony["name"], 0.4, ex.prvkey)
+    assert time.time() - t0 >= 0.35
+
+
+def test_longpoll_wakes_on_submit(colony):
+    """The hanging assign returns promptly when a process arrives."""
+    import threading
+
+    client = colony["client"]
+    ex = make_executor(colony, name="w-poll")
+    got = {}
+
+    def poll():
+        got["p"] = client.assign(colony["name"], 5.0, ex.prvkey)
+
+    th = threading.Thread(target=poll)
+    th.start()
+    time.sleep(0.2)
+    t0 = time.time()
+    client.submit(spec(args=["wake"]), colony["colony_prv"])
+    th.join(timeout=3.0)
+    assert not th.is_alive() and time.time() - t0 < 2.0
+    assert got["p"]["spec"]["funcname"] == "echo"
+
+
+def test_stats_and_introspection(colony):
+    client = colony["client"]
+    make_executor(colony, name="w-stats")
+    client.submit(spec(), colony["colony_prv"])
+    stats = client.stats(colony["name"], colony["colony_prv"])
+    assert stats["waiting"] >= 1 and stats["executors"] >= 1
+    procs = client.get_processes(colony["name"], colony["colony_prv"], state="waiting")
+    assert len(procs) >= 1
+
+
+def test_submit_requires_executortype(colony):
+    s = spec()
+    s.conditions.executortype = ""
+    with pytest.raises(ValidationError):
+        colony["client"].submit(s, colony["colony_prv"])
+
+
+def test_double_close_rejected(colony):
+    client = colony["client"]
+    ex = make_executor(colony, name="w-dc")
+    p = client.submit(spec(), colony["colony_prv"])
+    pd = client.assign(colony["name"], 2.0, ex.prvkey)
+    client.close(pd["processid"], ["done"], ex.prvkey)
+    from repro.core.errors import ConflictError
+
+    with pytest.raises(ConflictError):
+        client.close(pd["processid"], ["again"], ex.prvkey)

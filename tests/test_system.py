@@ -1,0 +1,94 @@
+"""End-to-end behaviour of the whole meta-OS (paper §4.1 walkthrough).
+
+This is the paper's own quickstart: register a helloworld executor with a
+colony, submit a function specification (Listing 1/5), have it assigned
+(Listing 4), and read the result — plus the queue surviving a server
+restart (statelessness, §3.4.3) when backed by sqlite.
+"""
+
+import pytest
+
+from repro.core import (
+    Colonies,
+    Crypto,
+    ExecutorBase,
+    FunctionSpec,
+    InProcTransport,
+    SqliteDatabase,
+)
+from repro.core.cluster import standalone_server
+
+
+def test_paper_quickstart_listing_3_4_5(colony):
+    client = colony["client"]
+    colonyname = colony["name"]
+    # Listing 3: create identity, register + approve executor, add function
+    executor_prvkey = Crypto.prvkey()
+    executorid = Crypto.id(executor_prvkey)
+    client.add_executor(
+        {
+            "executorname": "helloworld_executor",
+            "executorid": executorid,
+            "colonyname": colonyname,
+            "executortype": "helloworld_executor",
+        },
+        colony["colony_prv"],
+    )
+    client.approve_executor(executorid, colony["colony_prv"])
+    client.add_function(executorid, colonyname, "helloworld", executor_prvkey)
+
+    # Listing 5: submit the function specification (Listing 1 contents)
+    spec = FunctionSpec.from_dict({
+        "conditions": {
+            "colonyname": colonyname,
+            "executortype": "helloworld_executor",
+        },
+        "funcname": "helloworld",
+        "args": [],
+        "maxwaittime": 10,
+        "maxexectime": 100,
+        "maxretries": 3,
+        "priority": 1,
+    })
+    submitted = client.submit(spec, colony["colony_prv"])
+
+    # Listing 4: assign + close
+    process = client.assign(colonyname, 10, executor_prvkey)
+    assert process["spec"]["funcname"] == "helloworld"
+    client.close(process["processid"], ["hello world"], executor_prvkey)
+
+    done = client.get_process(submitted["processid"], colony["colony_prv"])
+    assert done["state"] == "successful"
+    assert done["out"] == ["hello world"]
+
+
+def test_queue_survives_server_restart(tmp_path, server_keys, colony_keys):
+    """Statelessness (§3.4.3): no in-memory session state — a brand-new
+    server process over the same database resumes exactly where the old
+    one stopped."""
+    server_prv, server_id = server_keys
+    colony_prv, colony_id = colony_keys
+    db_path = str(tmp_path / "colonies.db")
+
+    srv1 = standalone_server(server_id, SqliteDatabase(db_path))
+    client1 = Colonies(InProcTransport([srv1]))
+    client1.add_colony("dev", colony_id, server_prv)
+    ex = ExecutorBase(client1, "dev", "w1", "worker", colony_prvkey=colony_prv)
+    p = client1.submit(
+        FunctionSpec.from_dict({
+            "conditions": {"colonyname": "dev", "executortype": "worker"},
+            "funcname": "echo", "args": ["persisted"],
+        }),
+        colony_prv,
+    )
+    srv1.stop()
+    del srv1  # server "crashes"
+
+    srv2 = standalone_server(server_id, SqliteDatabase(db_path))
+    client2 = Colonies(InProcTransport([srv2]))
+    pd = client2.assign("dev", 2.0, ex.prvkey)  # same executor identity
+    assert pd["processid"] == p["processid"]
+    client2.close(pd["processid"], ["done-after-restart"], ex.prvkey)
+    done = client2.get_process(p["processid"], colony_prv)
+    assert done["state"] == "successful" and done["out"] == ["done-after-restart"]
+    srv2.stop()
