@@ -2,8 +2,16 @@
 
 Measures submit/assign/close cycles across database backends and with the
 zero-trust signature path on and off (isolates crypto cost from queue
-cost), plus candidate-query latency vs queue depth (the ORDER BY
-priority_time index at work).
+cost), plus three hot-path scaling probes:
+
+* candidate-query latency vs queue depth, with a *realistic* queue mix —
+  blocked (``wait_for_parents``) and executor-pinned processes sorted
+  ahead of the runnable tail, exactly the population that pinned the
+  seed broker's queue head;
+* ``colonystats`` latency vs total processes ever stored (counter-backed
+  stats must be flat);
+* idle ``failsafe_scan`` tick latency vs fleet size (deadline-heap scans
+  must be flat).
 """
 
 from __future__ import annotations
@@ -20,6 +28,7 @@ from repro.core import (
     SqliteDatabase,
 )
 from repro.core.cluster import standalone_server
+from repro.core.process import FAILED, RUNNING, SUCCESSFUL, WAITING, Process, now_ns
 
 from .common import Row, timeit
 
@@ -35,11 +44,30 @@ def _setup(db, verify: bool):
     return srv, client, colony_prv, ex
 
 
-def _spec(priority: int = 0) -> FunctionSpec:
+def _spec(priority: int = 0, names: list[str] | None = None) -> FunctionSpec:
     return FunctionSpec.from_dict({
-        "conditions": {"colonyname": "bench", "executortype": "worker"},
+        "conditions": {"colonyname": "bench", "executortype": "worker",
+                       "executornames": names or []},
         "funcname": "echo", "args": [1], "maxexectime": 300, "priority": priority,
     })
+
+
+def _fill_queue_mix(db, depth: int) -> None:
+    """Realistic backlog: 40% blocked on parents, 40% pinned to another
+    executor — all *older* (better priority_time) than the runnable 20%,
+    so naive head scans must wade through them on every call."""
+    base = now_ns()
+    n_blocked = n_pinned = 2 * depth // 5
+    for i in range(n_blocked):
+        p = Process.create(_spec(), submission_ns=base - 2 * 10**9 + i)
+        p.wait_for_parents = True
+        db.add_process(p)
+    for i in range(n_pinned):
+        p = Process.create(_spec(names=["some-other-executor"]),
+                           submission_ns=base - 10**9 + i)
+        db.add_process(p)
+    for i in range(depth - n_blocked - n_pinned):
+        db.add_process(Process.create(_spec(), submission_ns=base + i))
 
 
 def run() -> None:
@@ -61,12 +89,39 @@ def run() -> None:
             )
             srv.stop()
 
-    # queue-depth scaling: candidate query latency with a deep backlog
+    # queue-depth scaling: candidate query latency with a deep, mixed
+    # backlog (blocked + pinned processes ahead of the runnable head)
     for depth in (100, 1000, 5000):
         srv, client, colony_prv, ex = _setup(MemoryDatabase(), False)
-        for i in range(depth):
-            client.submit(_spec(priority=i % 3), colony_prv)
         db = srv.db
+        _fill_queue_mix(db, depth)
         us = timeit(lambda: db.candidates("bench", "worker", "w"), 200)
         Row.add(f"broker_candidates_depth_{depth}", us, "queue head lookup")
+        srv.stop()
+
+    # colonystats scaling: counter-backed stats must not scan the table
+    for total in (100, 10_000):
+        srv, client, colony_prv, ex = _setup(MemoryDatabase(), False)
+        db = srv.db
+        states = (WAITING, RUNNING, SUCCESSFUL, FAILED)
+        for i in range(total):
+            p = Process.create(_spec())
+            p.state = states[i % 4]
+            db.add_process(p)
+        us = timeit(lambda: client.stats("bench", colony_prv), 200)
+        Row.add(f"broker_stats_total_{total}", us, "colonystats latency")
+        srv.stop()
+
+    # failsafe scaling: the 250 ms tick over a healthy running fleet
+    for total in (100, 10_000):
+        srv, client, colony_prv, ex = _setup(MemoryDatabase(), False)
+        db = srv.db
+        far = now_ns() + 3600 * 10**9
+        for i in range(total):
+            p = Process.create(_spec())
+            p.state = RUNNING
+            p.deadline_ns = far + i
+            db.add_process(p)
+        us = timeit(srv.failsafe_scan, 100)
+        Row.add(f"broker_failsafe_fleet_{total}", us, "idle failsafe tick")
         srv.stop()

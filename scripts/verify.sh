@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 quick suite + the broker hot-path benchmark.
+#
+#   scripts/verify.sh          # quick suite (skips @slow compile tests)
+#   scripts/verify.sh --full   # everything, including @slow
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+if [[ "${1:-}" == "--full" ]]; then
+    python -m pytest -q
+else
+    python -m pytest -q -m "not slow"
+fi
+
+python -m benchmarks.run broker

@@ -13,6 +13,7 @@ Cron/generator scanning and the failsafe run on the leader only.
 from __future__ import annotations
 
 import threading
+from collections import deque
 
 from .cron import CronExtension
 from .database import Database, MemoryDatabase
@@ -34,10 +35,15 @@ class HAColonyCluster:
         verify_signatures: bool = True,
         seed: int = 0,
     ) -> None:
+        # One shared database: its per-colony locks (db.colony_lock) are the
+        # serialization point for assign/close/failsafe across ALL replicas.
         self.db = db if db is not None else MemoryDatabase()
         self.servers: list[ColoniesServer] = []
         self._applied_lock = threading.Lock()
+        # Bounded replay-dedup window; apply_assign's WAITING CAS is the
+        # authoritative idempotence guard for anything older.
         self._applied_ops: set[str] = set()
+        self._applied_order: deque[str] = deque(maxlen=4096)
 
         self.raft = ThreadedRaftCluster(replicas, self._apply, seed=seed)
 
@@ -67,6 +73,9 @@ class HAColonyCluster:
         with self._applied_lock:
             if key in self._applied_ops:
                 return
+            if len(self._applied_order) == self._applied_order.maxlen:
+                self._applied_ops.discard(self._applied_order[0])
+            self._applied_order.append(key)
             self._applied_ops.add(key)
         try:
             self.servers[0].apply_assign(entry)

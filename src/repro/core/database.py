@@ -1,4 +1,4 @@
-"""Queue-as-database (paper §3.2–3.3).
+"""Queue-as-database (paper §3.2–3.3) — indexed, event-friendly broker core.
 
 The paper's key departure from broker-based workflow systems: the queue
 IS a standard database table, so assignment can match *any* column
@@ -9,19 +9,40 @@ Two backends behind one interface:
 
 * :class:`SqliteDatabase` — faithful to the paper (Postgres in the Go
   implementation): the candidate query is literally an ``ORDER BY
-  priority_time ASC`` SQL select; file-backed (survives restarts) or
-  ``:memory:``.
-* :class:`MemoryDatabase` — per-(colony, executortype) bisect-sorted
-  queues for broker micro-benchmarks; identical semantics.
+  priority_time ASC`` SQL select over covering indexes; file-backed
+  (survives restarts) or ``:memory:``.
+* :class:`MemoryDatabase` — per-colony sharded in-process tables for
+  broker micro-benchmarks; identical semantics.
 
-Only ``assign`` mutates shared queue state non-monotonically, so it is
-the only operation guarded by the assignment lock (paper §3.4.1:
-"synchronization is not necessary for other requests").
+Both backends maintain the same auxiliary indexes so the server's hot
+paths do bounded work regardless of how many processes have ever been
+stored:
+
+* **per-colony state counters** — ``colony_stats`` is an O(states) dict
+  read (memdb) or a 4-row indexed select (sqlite), never a table scan;
+* **deadline indexes** — ``running_past_deadline`` /
+  ``waiting_past_deadline`` pop lazily-invalidated min-heaps (memdb) or
+  range-scan ``(state, deadline)`` B-tree indexes (sqlite), so the 250 ms
+  failsafe tick touches only expired + stale entries;
+* **ready-queue side-listing** — ``wait_for_parents`` processes are kept
+  out of the ready queues entirely (they re-enter via ``requeue`` when
+  released) and executor-targeted processes live in per-target side
+  queues, so neither class can pin the queue head for everyone else;
+* **per-colony locks** — ``colony_lock(colony)`` hands out one lock per
+  colony, shared by every server replica using the same database object,
+  so assignment/close/failsafe serialize per colony instead of across
+  the whole deployment.
+
+Stale ready-queue entries (processes assigned, closed, or expired since
+they were enqueued) are dropped lazily: each candidate scan compacts the
+prefix it walked in a single pass, and a whole queue is rebuilt once its
+stale count dominates — never one ``list.remove`` per entry.
 """
 
 from __future__ import annotations
 
 import bisect
+import heapq
 import json
 import sqlite3
 import threading
@@ -112,6 +133,14 @@ class Database:
     def delete_process(self, processid: str) -> None:
         raise NotImplementedError
 
+    def colony_stats(self, colony: str) -> dict[str, int]:
+        """Per-state process counts for one colony; O(states), not O(processes)."""
+        raise NotImplementedError
+
+    def colony_lock(self, colony: str) -> threading.RLock:
+        """Per-colony critical-section lock, shared by all replicas on this db."""
+        raise NotImplementedError
+
     # -- key/value side tables (cron, generators, CFS metadata) -------------
     def kv_put(self, table: str, key: str, value: dict) -> None:
         raise NotImplementedError
@@ -141,40 +170,93 @@ class Database:
 # In-memory backend
 # ---------------------------------------------------------------------------
 
+# Compact a ready queue outright once this many stale entries accumulated
+# AND they outnumber the live ones (amortized O(1) per transition).
+_COMPACT_MIN_STALE = 64
+
+
+class _ColonyShard:
+    """All mutable broker state for one colony, guarded by one lock."""
+
+    __slots__ = (
+        "lock",
+        "procs",
+        "queues",
+        "targeted",
+        "stale",
+        "counters",
+        "acct",
+        "exec_heap",
+        "wait_heap",
+        "exec_pushed",
+        "wait_pushed",
+    )
+
+    def __init__(self) -> None:
+        self.lock = threading.RLock()
+        self.procs: dict[str, Process] = {}
+        # executortype -> sorted [(priority_time, pid)] of ready untargeted procs
+        self.queues: dict[str, list[tuple[int, str]]] = {}
+        # executortype -> executorname -> sorted [(priority_time, pid)]
+        self.targeted: dict[str, dict[str, list[tuple[int, str]]]] = {}
+        self.stale: dict[str, int] = {}  # executortype -> stale-entry estimate
+        self.counters: dict[str, int] = {}  # state -> live count
+        self.acct: dict[str, str] = {}  # pid -> last counted state
+        self.exec_heap: list[tuple[int, str]] = []  # (deadline, pid), RUNNING
+        self.wait_heap: list[tuple[int, str]] = []  # (waitdeadline, pid), WAITING
+        self.exec_pushed: dict[str, int] = {}  # pid -> deadline currently in heap
+        self.wait_pushed: dict[str, int] = {}
+
 
 class MemoryDatabase(Database):
     def __init__(self) -> None:
-        self._lock = threading.RLock()
+        self._glock = threading.RLock()  # registries + shard map only
         self._colonies: dict[str, Colony] = {}
         self._executors: dict[str, Executor] = {}
         self._functions: list[dict] = []
-        self._processes: dict[str, Process] = {}
-        # (colony, executortype) -> sorted list of (priority_time, processid)
-        self._queues: dict[tuple[str, str], list[tuple[int, str]]] = {}
+        self._shards: dict[str, _ColonyShard] = {}
+        self._pid_colony: dict[str, str] = {}
         self._kv: dict[str, dict[str, dict]] = {}
         self._kvlists: dict[str, dict[str, list[dict]]] = {}
+        # Observability for bounded-work regression tests/benchmarks.
+        self.metrics: dict[str, int] = {
+            "deadline_pops": 0,
+            "queue_scan_steps": 0,
+            "stale_evicted": 0,
+            "compactions": 0,
+        }
+
+    def _shard(self, colony: str) -> _ColonyShard:
+        with self._glock:
+            s = self._shards.get(colony)
+            if s is None:
+                s = self._shards[colony] = _ColonyShard()
+            return s
+
+    def colony_lock(self, colony: str) -> threading.RLock:
+        return self._shard(colony).lock
 
     # colonies
     def add_colony(self, colony: Colony) -> None:
-        with self._lock:
+        with self._glock:
             if colony.colonyname in self._colonies:
                 raise ConflictError(f"colony {colony.colonyname} exists")
             self._colonies[colony.colonyname] = colony
 
     def get_colony(self, name: str) -> Colony:
-        with self._lock:
+        with self._glock:
             c = self._colonies.get(name)
             if c is None:
                 raise NotFoundError(f"colony {name} not found")
             return c
 
     def list_colonies(self) -> list[Colony]:
-        with self._lock:
+        with self._glock:
             return list(self._colonies.values())
 
     # executors
     def add_executor(self, ex: Executor) -> None:
-        with self._lock:
+        with self._glock:
             if ex.executorid in self._executors:
                 raise ConflictError("executor exists")
             for other in self._executors.values():
@@ -186,48 +268,48 @@ class MemoryDatabase(Database):
             self._executors[ex.executorid] = ex
 
     def get_executor(self, executorid: str) -> Executor:
-        with self._lock:
+        with self._glock:
             ex = self._executors.get(executorid)
             if ex is None:
                 raise NotFoundError("executor not found")
             return ex
 
     def get_executor_by_name(self, colony: str, name: str) -> Executor:
-        with self._lock:
+        with self._glock:
             for ex in self._executors.values():
                 if ex.colonyname == colony and ex.executorname == name:
                     return ex
             raise NotFoundError(f"executor {name} not found")
 
     def list_executors(self, colony: str) -> list[Executor]:
-        with self._lock:
+        with self._glock:
             return [e for e in self._executors.values() if e.colonyname == colony]
 
     def set_executor_state(self, executorid: str, state: str) -> None:
-        with self._lock:
+        with self._glock:
             self.get_executor(executorid).state = state
 
     def remove_executor(self, executorid: str) -> None:
-        with self._lock:
+        with self._glock:
             if executorid not in self._executors:
                 raise NotFoundError("executor not found")
             del self._executors[executorid]
 
     def touch_executor(self, executorid: str, ts: int) -> None:
-        with self._lock:
+        with self._glock:
             ex = self._executors.get(executorid)
             if ex is not None:
                 ex.lastheardfrom_ns = ts
 
     # functions
     def add_function(self, executorid: str, colony: str, funcname: str) -> None:
-        with self._lock:
+        with self._glock:
             self._functions.append(
                 {"executorid": executorid, "colonyname": colony, "funcname": funcname}
             )
 
     def list_functions(self, colony: str, executorid: str | None = None) -> list[dict]:
-        with self._lock:
+        with self._glock:
             return [
                 dict(f)
                 for f in self._functions
@@ -235,125 +317,317 @@ class MemoryDatabase(Database):
                 and (executorid is None or f["executorid"] == executorid)
             ]
 
+    # -- process bookkeeping (all called with the shard lock held) -----------
+    def _account(self, s: _ColonyShard, p: Process) -> None:
+        old = s.acct.get(p.processid)
+        if old == p.state:
+            return
+        if old is not None:
+            s.counters[old] = s.counters.get(old, 0) - 1
+            if old == WAITING:
+                self._note_stale(s, p)
+        s.counters[p.state] = s.counters.get(p.state, 0) + 1
+        s.acct[p.processid] = p.state
+
+    def _note_stale(self, s: _ColonyShard, p: Process) -> None:
+        etype = p.spec.conditions.executortype
+        # One unit per queue entry the process held: a multi-target process
+        # left one entry in each target's side queue.
+        entries = len(p.spec.conditions.executornames) or 1
+        s.stale[etype] = s.stale.get(etype, 0) + entries
+        self._maybe_compact(s, etype)
+
+    def _maybe_compact(self, s: _ColonyShard, etype: str) -> None:
+        n_stale = s.stale.get(etype, 0)
+        q = s.queues.get(etype, [])
+        tmap = s.targeted.get(etype, {})
+        total = len(q) + sum(len(v) for v in tmap.values())
+        if n_stale < _COMPACT_MIN_STALE or n_stale * 2 <= total:
+            return
+
+        def live(entry: tuple[int, str]) -> bool:
+            lp = s.procs.get(entry[1])
+            return lp is not None and lp.queue_ready
+
+        before = total
+        q[:] = [e for e in q if live(e)]
+        for name in list(tmap):
+            tq = tmap[name]
+            tq[:] = [e for e in tq if live(e)]
+            if not tq:
+                del tmap[name]
+        after = len(q) + sum(len(v) for v in tmap.values())
+        s.stale[etype] = 0
+        self.metrics["compactions"] += 1
+        self.metrics["stale_evicted"] += before - after
+
+    def _push_deadlines(self, s: _ColonyShard, p: Process) -> None:
+        pid = p.processid
+        if p.state == RUNNING and p.deadline_ns:
+            if s.exec_pushed.get(pid) != p.deadline_ns:
+                heapq.heappush(s.exec_heap, (p.deadline_ns, pid))
+                s.exec_pushed[pid] = p.deadline_ns
+        if p.state == WAITING and p.waitdeadline_ns:
+            if s.wait_pushed.get(pid) != p.waitdeadline_ns:
+                heapq.heappush(s.wait_heap, (p.waitdeadline_ns, pid))
+                s.wait_pushed[pid] = p.waitdeadline_ns
+
+    def _enqueue(self, s: _ColonyShard, p: Process) -> None:
+        # Blocked processes are side-lined entirely; they re-enter the ready
+        # queues through requeue() when their last parent succeeds.
+        if not p.queue_ready:
+            return
+        etype = p.spec.conditions.executortype
+        entry = (p.priority_time, p.processid)
+        targets = p.spec.conditions.executornames
+        if targets:
+            tmap = s.targeted.setdefault(etype, {})
+            for name in targets:
+                self._insort_unique(tmap.setdefault(name, []), entry)
+        else:
+            self._insort_unique(s.queues.setdefault(etype, []), entry)
+
+    @staticmethod
+    def _insort_unique(q: list[tuple[int, str]], entry: tuple[int, str]) -> None:
+        idx = bisect.bisect_left(q, entry)
+        if idx < len(q) and q[idx] == entry:
+            return  # already queued (e.g. failsafe requeue racing a release)
+        q.insert(idx, entry)
+
     # processes
-    def _queue_key(self, p: Process) -> tuple[str, str]:
-        return (p.colonyname, p.spec.conditions.executortype)
-
     def add_process(self, p: Process) -> None:
-        with self._lock:
-            self._processes[p.processid] = p
-            self._enqueue(p)
-
-    def _enqueue(self, p: Process) -> None:
-        q = self._queues.setdefault(self._queue_key(p), [])
-        bisect.insort(q, (p.priority_time, p.processid))
+        s = self._shard(p.colonyname)
+        with s.lock:
+            s.procs[p.processid] = p
+            with self._glock:
+                self._pid_colony[p.processid] = p.colonyname
+            self._account(s, p)
+            self._push_deadlines(s, p)
+            self._enqueue(s, p)
 
     def get_process(self, processid: str) -> Process:
-        with self._lock:
-            p = self._processes.get(processid)
+        with self._glock:
+            colony = self._pid_colony.get(processid)
+        if colony is None:
+            raise NotFoundError(f"process {processid} not found")
+        s = self._shard(colony)
+        with s.lock:
+            p = s.procs.get(processid)
             if p is None:
                 raise NotFoundError(f"process {processid} not found")
             return p
 
     def update_process(self, p: Process) -> None:
-        with self._lock:
-            if p.processid not in self._processes:
+        s = self._shard(p.colonyname)
+        with s.lock:
+            if p.processid not in s.procs:
                 raise NotFoundError("process not found")
-            self._processes[p.processid] = p
+            s.procs[p.processid] = p
+            self._account(s, p)
+            self._push_deadlines(s, p)
 
     def requeue(self, p: Process) -> None:
-        """Re-insert a reset process (failsafe path)."""
-        with self._lock:
-            self._enqueue(p)
+        """Re-insert a reset or released process into the ready queues."""
+        s = self._shard(p.colonyname)
+        with s.lock:
+            self._push_deadlines(s, p)
+            self._enqueue(s, p)
+
+    def _scan_queue(
+        self,
+        s: _ColonyShard,
+        q: list[tuple[int, str]] | None,
+        etype: str,
+        executorname: str,
+        limit: int,
+        targeted: bool,
+    ) -> list[Process]:
+        """Collect up to ``limit`` ready processes from one sorted queue.
+
+        Stale entries discovered in the scanned prefix are evicted in a
+        single rebuild of that prefix — never one ``list.remove`` each.
+        """
+        if not q:
+            return []
+        out: list[Process] = []
+        scanned = 0
+        found_stale = False
+        for _, pid in q:
+            scanned += 1
+            self.metrics["queue_scan_steps"] += 1
+            p = s.procs.get(pid)
+            ok = p is not None and p.queue_ready
+            if ok and targeted:
+                ok = executorname in p.spec.conditions.executornames
+            elif ok and p.spec.conditions.executornames:
+                ok = False  # targeted proc must never ride the shared queue
+            if not ok:
+                found_stale = True
+                continue
+            out.append(p)
+            if len(out) >= limit:
+                break
+        if found_stale:
+
+            def live(entry: tuple[int, str]) -> bool:
+                lp = s.procs.get(entry[1])
+                if lp is None or not lp.queue_ready:
+                    return False
+                if targeted:
+                    return executorname in lp.spec.conditions.executornames
+                return not lp.spec.conditions.executornames
+
+            prefix = [e for e in q[:scanned] if live(e)]
+            evicted = scanned - len(prefix)
+            self.metrics["stale_evicted"] += evicted
+            if evicted:
+                s.stale[etype] = max(0, s.stale.get(etype, 0) - evicted)
+            q[:scanned] = prefix
+        return out
 
     def candidates(
         self, colony: str, executortype: str, executorname: str, limit: int = 8
     ) -> list[Process]:
-        with self._lock:
-            q = self._queues.get((colony, executortype), [])
-            out: list[Process] = []
-            stale: list[tuple[int, str]] = []
-            for item in q:
-                _, pid = item
-                p = self._processes.get(pid)
-                if p is None or p.state != WAITING:
-                    stale.append(item)  # lazily drop assigned/closed entries
-                    continue
-                if p.wait_for_parents:
-                    continue
-                targets = p.spec.conditions.executornames
-                if targets and executorname not in targets:
-                    continue
-                out.append(p)
-                if len(out) >= limit:
-                    break
-            for item in stale:
-                q.remove(item)
-            return out
+        s = self._shard(colony)
+        with s.lock:
+            main = self._scan_queue(
+                s,
+                s.queues.get(executortype),
+                executortype,
+                executorname,
+                limit,
+                targeted=False,
+            )
+            side = self._scan_queue(
+                s,
+                s.targeted.get(executortype, {}).get(executorname),
+                executortype,
+                executorname,
+                limit,
+                targeted=True,
+            )
+            if not side:
+                return main
+            merged = sorted(main + side, key=lambda p: (p.priority_time, p.processid))
+            return merged[:limit]
 
     def list_processes(
         self, colony: str, state: str | None = None, count: int = 100
     ) -> list[Process]:
-        with self._lock:
+        s = self._shard(colony)
+        with s.lock:
             out = [
                 p
-                for p in self._processes.values()
-                if p.colonyname == colony and (state is None or p.state == state)
+                for p in s.procs.values()
+                if state is None or p.state == state
             ]
             out.sort(key=lambda p: p.priority_time)
             return out[:count]
 
+    def _pop_expired(
+        self,
+        s: _ColonyShard,
+        heap: list[tuple[int, str]],
+        pushed: dict[str, int],
+        want_state: str,
+        attr: str,
+        ts: int,
+    ) -> list[Process]:
+        expired: list[Process] = []
+        keep: list[tuple[int, str]] = []
+        while heap and heap[0][0] < ts:
+            deadline, pid = heapq.heappop(heap)
+            self.metrics["deadline_pops"] += 1
+            p = s.procs.get(pid)
+            if p is not None and p.state == want_state and getattr(p, attr) == deadline:
+                expired.append(p)
+                keep.append((deadline, pid))  # caller mutates; entry goes stale then
+            elif pushed.get(pid) == deadline:
+                pushed.pop(pid, None)
+        for entry in keep:
+            heapq.heappush(heap, entry)
+        return expired
+
     def running_past_deadline(self, ts: int) -> list[Process]:
-        with self._lock:
-            return [
-                p
-                for p in self._processes.values()
-                if p.state == RUNNING and p.deadline_ns and p.deadline_ns < ts
-            ]
+        with self._glock:
+            shards = list(self._shards.values())
+        out: list[Process] = []
+        for s in shards:
+            with s.lock:
+                out.extend(
+                    self._pop_expired(
+                        s, s.exec_heap, s.exec_pushed, RUNNING, "deadline_ns", ts
+                    )
+                )
+        return out
 
     def waiting_past_deadline(self, ts: int) -> list[Process]:
-        with self._lock:
-            return [
-                p
-                for p in self._processes.values()
-                if p.state == WAITING and p.waitdeadline_ns and p.waitdeadline_ns < ts
-            ]
+        with self._glock:
+            shards = list(self._shards.values())
+        out: list[Process] = []
+        for s in shards:
+            with s.lock:
+                out.extend(
+                    self._pop_expired(
+                        s, s.wait_heap, s.wait_pushed, WAITING, "waitdeadline_ns", ts
+                    )
+                )
+        return out
 
     def delete_process(self, processid: str) -> None:
-        with self._lock:
-            self._processes.pop(processid, None)
+        with self._glock:
+            colony = self._pid_colony.pop(processid, None)
+        if colony is None:
+            return
+        s = self._shard(colony)
+        with s.lock:
+            p = s.procs.pop(processid, None)
+            if p is None:
+                return
+            old = s.acct.pop(processid, None)
+            if old is not None:
+                s.counters[old] = s.counters.get(old, 0) - 1
+            s.exec_pushed.pop(processid, None)
+            s.wait_pushed.pop(processid, None)
+            if old == WAITING:
+                self._note_stale(s, p)
+
+    def colony_stats(self, colony: str) -> dict[str, int]:
+        s = self._shard(colony)
+        with s.lock:
+            return {state: n for state, n in s.counters.items() if n}
 
     # kv
     def kv_put(self, table: str, key: str, value: dict) -> None:
-        with self._lock:
+        with self._glock:
             self._kv.setdefault(table, {})[key] = dict(value)
 
     def kv_get(self, table: str, key: str) -> dict | None:
-        with self._lock:
+        with self._glock:
             v = self._kv.get(table, {}).get(key)
             return dict(v) if v is not None else None
 
     def kv_del(self, table: str, key: str) -> None:
-        with self._lock:
+        with self._glock:
             self._kv.get(table, {}).pop(key, None)
 
     def kv_list(self, table: str) -> list[dict]:
-        with self._lock:
+        with self._glock:
             return [dict(v) for v in self._kv.get(table, {}).values()]
 
     def kv_append(self, table: str, key: str, value: dict) -> int:
-        with self._lock:
+        with self._glock:
             lst = self._kvlists.setdefault(table, {}).setdefault(key, [])
             lst.append(dict(value))
             return len(lst)
 
     def kv_take_all(self, table: str, key: str) -> list[dict]:
-        with self._lock:
+        with self._glock:
             lst = self._kvlists.get(table, {}).pop(key, [])
             return lst
 
     def kv_len(self, table: str, key: str) -> int:
-        with self._lock:
+        with self._glock:
             return len(self._kvlists.get(table, {}).get(key, []))
 
 
@@ -383,11 +657,17 @@ CREATE TABLE IF NOT EXISTS processes (
     prioritytime INTEGER NOT NULL,
     deadline INTEGER NOT NULL DEFAULT 0,
     waitdeadline INTEGER NOT NULL DEFAULT 0,
+    targets TEXT NOT NULL DEFAULT '',
     body TEXT NOT NULL
 );
 CREATE INDEX IF NOT EXISTS idx_proc_queue
     ON processes (colonyname, executortype, state, waitforparents, prioritytime);
 CREATE INDEX IF NOT EXISTS idx_proc_deadline ON processes (state, deadline);
+CREATE INDEX IF NOT EXISTS idx_proc_waitdeadline ON processes (state, waitdeadline);
+CREATE TABLE IF NOT EXISTS proc_counts (
+    colonyname TEXT NOT NULL, state TEXT NOT NULL, n INTEGER NOT NULL,
+    PRIMARY KEY (colonyname, state)
+);
 CREATE TABLE IF NOT EXISTS kv (
     tbl TEXT NOT NULL, key TEXT NOT NULL, value TEXT NOT NULL,
     PRIMARY KEY (tbl, key)
@@ -399,22 +679,74 @@ CREATE INDEX IF NOT EXISTS idx_kvlist ON kvlist (tbl, key, seq);
 """
 
 
+def _targets_column(p: Process) -> str:
+    names = p.spec.conditions.executornames
+    return "|" + "|".join(names) + "|" if names else ""
+
+
 class SqliteDatabase(Database):
     """File-backed (or ``:memory:``) SQL queue.
 
     The candidate query is the paper's: ``ORDER BY prioritytime ASC`` over
-    indexed (colony, executortype, state, waitforparents) columns.
+    indexed (colony, executortype, state, waitforparents) columns, with
+    executor targeting pushed into SQL so pinned processes never shadow
+    the queue head for other executors. ``proc_counts`` is maintained
+    transactionally with every process write, making ``colony_stats``
+    independent of table size (and restart-safe).
     """
 
     def __init__(self, path: str = ":memory:") -> None:
         self._lock = threading.RLock()
+        self._colony_locks: dict[str, threading.RLock] = {}
         self._conn = sqlite3.connect(path, check_same_thread=False)
         self._conn.execute("PRAGMA journal_mode=WAL")
+        self._migrate()
         self._conn.executescript(_SCHEMA)
+        self._rebuild_counts_if_missing()
         self._conn.commit()
+
+    def _migrate(self) -> None:
+        """Add columns introduced after a db file was created."""
+        cols = {
+            r[1]
+            for r in self._conn.execute("PRAGMA table_info(processes)").fetchall()
+        }
+        if cols and "targets" not in cols:
+            self._conn.execute(
+                "ALTER TABLE processes ADD COLUMN targets TEXT NOT NULL DEFAULT ''"
+            )
+            # Backfill from the body JSON: pre-migration rows kept executor
+            # targeting only there, and a blank targets column would make a
+            # pinned process assignable by anyone.
+            rows = self._conn.execute(
+                "SELECT processid, body FROM processes"
+            ).fetchall()
+            for pid, body in rows:
+                t = _targets_column(Process.from_json(body))
+                if t:
+                    self._conn.execute(
+                        "UPDATE processes SET targets=? WHERE processid=?", (t, pid)
+                    )
+
+    def _rebuild_counts_if_missing(self) -> None:
+        have = self._conn.execute("SELECT COUNT(*) FROM proc_counts").fetchone()[0]
+        procs = self._conn.execute("SELECT COUNT(*) FROM processes").fetchone()[0]
+        if have == 0 and procs > 0:
+            self._conn.execute(
+                "INSERT INTO proc_counts"
+                " SELECT colonyname, state, COUNT(*) FROM processes"
+                " GROUP BY colonyname, state"
+            )
 
     def _exec(self, sql: str, args: Iterable[Any] = ()) -> sqlite3.Cursor:
         return self._conn.execute(sql, tuple(args))
+
+    def colony_lock(self, colony: str) -> threading.RLock:
+        with self._lock:
+            lk = self._colony_locks.get(colony)
+            if lk is None:
+                lk = self._colony_locks[colony] = threading.RLock()
+            return lk
 
     # colonies
     def add_colony(self, colony: Colony) -> None:
@@ -552,11 +884,18 @@ class SqliteDatabase(Database):
             ]
 
     # processes
+    def _bump_count(self, colony: str, state: str, delta: int) -> None:
+        self._exec(
+            "INSERT INTO proc_counts VALUES (?,?,?)"
+            " ON CONFLICT(colonyname,state) DO UPDATE SET n=n+excluded.n",
+            (colony, state, delta),
+        )
+
     def _write_process(self, p: Process, insert: bool) -> None:
         body = p.to_json()
         if insert:
             self._exec(
-                "INSERT INTO processes VALUES (?,?,?,?,?,?,?,?,?)",
+                "INSERT INTO processes VALUES (?,?,?,?,?,?,?,?,?,?)",
                 (
                     p.processid,
                     p.colonyname,
@@ -566,25 +905,34 @@ class SqliteDatabase(Database):
                     p.priority_time,
                     p.deadline_ns,
                     p.waitdeadline_ns,
+                    _targets_column(p),
                     body,
                 ),
             )
+            self._bump_count(p.colonyname, p.state, +1)
         else:
-            cur = self._exec(
+            old = self._exec(
+                "SELECT state FROM processes WHERE processid=?", (p.processid,)
+            ).fetchone()
+            if old is None:
+                raise NotFoundError("process not found")
+            self._exec(
                 "UPDATE processes SET state=?, waitforparents=?, prioritytime=?,"
-                " deadline=?, waitdeadline=?, body=? WHERE processid=?",
+                " deadline=?, waitdeadline=?, targets=?, body=? WHERE processid=?",
                 (
                     p.state,
                     int(p.wait_for_parents),
                     p.priority_time,
                     p.deadline_ns,
                     p.waitdeadline_ns,
+                    _targets_column(p),
                     body,
                     p.processid,
                 ),
             )
-            if cur.rowcount == 0:
-                raise NotFoundError("process not found")
+            if old[0] != p.state:
+                self._bump_count(p.colonyname, old[0], -1)
+                self._bump_count(p.colonyname, p.state, +1)
         self._conn.commit()
 
     def add_process(self, p: Process) -> None:
@@ -609,22 +957,16 @@ class SqliteDatabase(Database):
     ) -> list[Process]:
         with self._lock:
             # The paper's queue query (§3.3): the table *is* the queue.
+            # Targeting is part of the WHERE clause, so a process pinned to
+            # another executor can never occupy this executor's queue head.
             rows = self._exec(
                 "SELECT body FROM processes"
                 " WHERE colonyname=? AND executortype=? AND state=? AND waitforparents=0"
+                " AND (targets='' OR instr(targets, ?) > 0)"
                 " ORDER BY prioritytime ASC LIMIT ?",
-                (colony, executortype, WAITING, limit * 4),
+                (colony, executortype, WAITING, f"|{executorname}|", limit),
             ).fetchall()
-            out = []
-            for (body,) in rows:
-                p = Process.from_json(body)
-                targets = p.spec.conditions.executornames
-                if targets and executorname not in targets:
-                    continue
-                out.append(p)
-                if len(out) >= limit:
-                    break
-            return out
+            return [Process.from_json(body) for (body,) in rows]
 
     def list_processes(
         self, colony: str, state: str | None = None, count: int = 100
@@ -646,6 +988,7 @@ class SqliteDatabase(Database):
 
     def running_past_deadline(self, ts: int) -> list[Process]:
         with self._lock:
+            # Range scan on idx_proc_deadline (state, deadline): O(expired).
             rows = self._exec(
                 "SELECT body FROM processes WHERE state=? AND deadline>0 AND deadline<?",
                 (RUNNING, ts),
@@ -654,6 +997,7 @@ class SqliteDatabase(Database):
 
     def waiting_past_deadline(self, ts: int) -> list[Process]:
         with self._lock:
+            # Range scan on idx_proc_waitdeadline (state, waitdeadline).
             rows = self._exec(
                 "SELECT body FROM processes WHERE state=? AND waitdeadline>0 AND waitdeadline<?",
                 (WAITING, ts),
@@ -662,8 +1006,23 @@ class SqliteDatabase(Database):
 
     def delete_process(self, processid: str) -> None:
         with self._lock:
+            row = self._exec(
+                "SELECT colonyname, state FROM processes WHERE processid=?",
+                (processid,),
+            ).fetchone()
+            if row is None:
+                return
             self._exec("DELETE FROM processes WHERE processid=?", (processid,))
+            self._bump_count(row[0], row[1], -1)
             self._conn.commit()
+
+    def colony_stats(self, colony: str) -> dict[str, int]:
+        with self._lock:
+            rows = self._exec(
+                "SELECT state, n FROM proc_counts WHERE colonyname=? AND n>0",
+                (colony,),
+            ).fetchall()
+            return {r[0]: r[1] for r in rows}
 
     def requeue(self, p: Process) -> None:  # row update already re-queues in SQL
         pass

@@ -79,6 +79,11 @@ class Process:
             p.waitdeadline_ns = ts + spec.maxwaittime * 10**9
         return p
 
+    @property
+    def queue_ready(self) -> bool:
+        """True iff this process may occupy a ready queue (assignable)."""
+        return self.state == WAITING and not self.wait_for_parents
+
     def to_dict(self) -> dict:
         return {
             "processid": self.processid,

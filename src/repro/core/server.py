@@ -12,6 +12,19 @@ Responsibilities implemented here:
   * workflow DAGs with ``wait_for_parents`` + dynamic children (§3.4.2)
   * zero-trust authorization of every envelope (§3.4.6)
 
+Concurrency model (this file plus database.py):
+
+* Assignment, close, and failsafe mutations for one colony serialize on
+  that colony's ``db.colony_lock`` — colonies never contend with each
+  other, and a stale executor's close can no longer interleave with a
+  failsafe reset (the close re-validates state + ownership under the
+  lock before mutating).
+* Long-polling executors park on a per-(colony, executortype) condition
+  variable and are woken only when *their* queue gains work (submit,
+  child release, failsafe requeue), instead of polling a global CV.
+  A monotonically bumped version per queue closes the classic
+  check-then-wait race without holding any lock across the DB probe.
+
 Cron, generators and CFS are separate modules wired in by this server.
 """
 
@@ -33,6 +46,7 @@ from .errors import (
 from .process import (
     FAILED,
     RUNNING,
+    STATES,
     SUCCESSFUL,
     WAITING,
     Colony,
@@ -46,6 +60,16 @@ from .spec import FunctionSpec, WorkflowSpec
 USERS_TABLE = "users"
 
 
+class _QueueSignal:
+    """Wakeup channel for one (colony, executortype) ready queue."""
+
+    __slots__ = ("cv", "version")
+
+    def __init__(self) -> None:
+        self.cv = threading.Condition()
+        self.version = 0
+
+
 class ColoniesServer:
     """A single Colonies server replica.
 
@@ -53,6 +77,11 @@ class ColoniesServer:
     key); only that identity may create colonies. In HA mode, ``is_leader``
     and ``propose_assign`` are overridden by the cluster layer.
     """
+
+    # HA replicas re-check leadership at this cadence while parked in
+    # ``assign``; standalone servers sleep the full long-poll timeout and
+    # rely purely on queue notifications.
+    HA_LEADER_RECHECK_S = 0.5
 
     def __init__(
         self,
@@ -65,9 +94,13 @@ class ColoniesServer:
         self.serverid = serverid
         self.db = db if db is not None else MemoryDatabase()
         self.verify_signatures = verify_signatures
-        # The one synchronized critical section (paper §3.4.1).
-        self._assign_lock = threading.Lock()
-        self._queue_cv = threading.Condition()
+        # Per-(colony, executortype) wakeup channels for long-poll assign.
+        self._signals: dict[tuple[str, str], _QueueSignal] = {}
+        self._signals_guard = threading.Lock()
+        # Leader-local per-colony assign serialization for the HA path (the
+        # shared db.colony_lock cannot be held across a Raft proposal: the
+        # commit is applied on another thread that needs that same lock).
+        self._local_assign_locks: dict[str, threading.RLock] = {}
         self._handlers: dict[str, Callable[[str, dict], Any]] = {
             "addcolony": self._h_add_colony,
             "addexecutor": self._h_add_executor,
@@ -90,6 +123,7 @@ class ColoniesServer:
         # Extension points (cron/generator/fs register their handlers here).
         self.extensions: list[Any] = []
         # HA hooks — standalone servers are always leader.
+        self._ha = False
         self._is_leader: Callable[[], bool] = lambda: True
         self._propose_assign: Callable[[dict], None] | None = None
         self._stop = threading.Event()
@@ -231,7 +265,7 @@ class ColoniesServer:
         self._require_member(identity, spec.conditions.colonyname)
         p = Process.create(spec)
         self.db.add_process(p)
-        self._notify_queue()
+        self._notify_queue([self._queue_key(p)])
         return p.to_dict()
 
     def _h_submit_workflow(self, identity: str, payload: dict) -> dict:
@@ -248,7 +282,9 @@ class ColoniesServer:
             s.conditions.colonyname = s.conditions.colonyname or colony
         wf.validate()
         procs = self.submit_workflow_processes(wf)
-        self._notify_queue()
+        self._notify_queue(
+            [self._queue_key(p) for p in procs if not p.wait_for_parents]
+        )
         return {
             "workflowid": procs[0].workflowid,
             "processes": [p.to_dict() for p in procs],
@@ -274,23 +310,47 @@ class ColoniesServer:
         return p.to_dict()
 
     def assign(self, colony: str, ex: Executor, timeout: float) -> Process | None:
-        """Long-poll assignment (paper §3.3: the server *hangs* the request)."""
+        """Long-poll assignment (paper §3.3: the server *hangs* the request).
+
+        Event-driven: the request parks on the (colony, executortype)
+        signal and is woken exactly when that queue gains work.
+        """
         deadline = now_ns() + int(timeout * 1e9)
+        sig = self._signal((colony, ex.executortype))
         while not self._stop.is_set():
             if not self._is_leader():
                 raise NotLeaderError("assign must be served by the leader")
+            with sig.cv:
+                version = sig.version
             p = self._try_assign_once(colony, ex)
             if p is not None:
                 return p
             remaining = (deadline - now_ns()) / 1e9
             if remaining <= 0:
                 return None
-            with self._queue_cv:
-                self._queue_cv.wait(timeout=min(remaining, 0.5))
+            # HA replicas wake periodically to notice lost leadership;
+            # standalone servers sleep until notified (or timeout).
+            tick = self.HA_LEADER_RECHECK_S if self._ha else remaining
+            with sig.cv:
+                if sig.version == version:  # nothing arrived since we probed
+                    sig.cv.wait(timeout=min(remaining, tick))
         return None
 
+    def _local_assign_lock(self, colony: str) -> threading.RLock:
+        with self._signals_guard:
+            lk = self._local_assign_locks.get(colony)
+            if lk is None:
+                lk = self._local_assign_locks[colony] = threading.RLock()
+            return lk
+
     def _try_assign_once(self, colony: str, ex: Executor) -> Process | None:
-        with self._assign_lock:
+        if self._propose_assign is not None:
+            # HA: leader-local serialization; Raft log order plus the
+            # WAITING CAS in apply_assign make assignment exactly-once.
+            lock = self._local_assign_lock(colony)
+        else:
+            lock = self.db.colony_lock(colony)
+        with lock:
             cands = self.db.candidates(colony, ex.executortype, ex.executorname)
             for p in cands:
                 op = {
@@ -301,34 +361,50 @@ class ColoniesServer:
                 }
                 if self._propose_assign is not None:
                     # HA path: serialize through the Raft log before applying.
+                    # The apply's WAITING CAS may lose (failsafe expiry,
+                    # leader churn) and the cluster swallows that conflict —
+                    # so confirm this op actually won before handing the
+                    # process to the executor.
                     self._propose_assign(op)
-                else:
-                    self.apply_assign(op)
+                    assigned = self.db.get_process(p.processid)
+                    if (
+                        assigned.state != RUNNING
+                        or assigned.assignedexecutorid != ex.executorid
+                    ):
+                        continue  # lost the race — try the next candidate
+                    return assigned
+                self.apply_assign(op)
                 return self.db.get_process(p.processid)
         return None
 
     def apply_assign(self, op: dict) -> None:
-        """State-machine apply for an assign op (also invoked by Raft commit)."""
+        """State-machine apply for an assign op (also invoked by Raft commit).
+
+        Compare-and-swap on ``state == WAITING`` — idempotent under Raft
+        replay, and safe against a failsafe reset racing the assignment.
+        """
         p = self.db.get_process(op["processid"])
-        if p.state != WAITING:
-            raise ConflictError("process no longer waiting")
-        ts = op["ts"]
-        p.state = RUNNING
-        p.isassigned = True
-        p.assignedexecutorid = op["executorid"]
-        p.starttime_ns = ts
-        if p.spec.maxexectime and p.spec.maxexectime > 0:
-            p.deadline_ns = ts + p.spec.maxexectime * 10**9
-        else:
-            p.deadline_ns = 0
-        # Dataflow (Table 4): inputs = concatenated parent outputs.
-        if p.parents:
-            inputs: list[Any] = []
-            for parent_id in p.parents:
-                parent = self.db.get_process(parent_id)
-                inputs.extend(parent.output)
-            p.inputs = inputs
-        self.db.update_process(p)
+        with self.db.colony_lock(p.colonyname):
+            p = self.db.get_process(op["processid"])  # re-read under the lock
+            if p.state != WAITING:
+                raise ConflictError("process no longer waiting")
+            ts = op["ts"]
+            p.state = RUNNING
+            p.isassigned = True
+            p.assignedexecutorid = op["executorid"]
+            p.starttime_ns = ts
+            if p.spec.maxexectime and p.spec.maxexectime > 0:
+                p.deadline_ns = ts + p.spec.maxexectime * 10**9
+            else:
+                p.deadline_ns = 0
+            # Dataflow (Table 4): inputs = concatenated parent outputs.
+            if p.parents:
+                inputs: list[Any] = []
+                for parent_id in p.parents:
+                    parent = self.db.get_process(parent_id)
+                    inputs.extend(parent.output)
+                p.inputs = inputs
+            self.db.update_process(p)
 
     # -- close ---------------------------------------------------------------
     def _h_close(self, identity: str, payload: dict) -> dict:
@@ -342,41 +418,67 @@ class ColoniesServer:
         succeeded = bool(payload.get("successful", True))
         output = payload.get("out", [])
         errors = payload.get("errors", [])
-        self.close_process(p, succeeded, output, errors)
+        # The authoritative ownership check happens again inside
+        # close_process, under the colony lock (close/failsafe race).
+        self.close_process(p, succeeded, output, errors, ex.executorid)
         return self.db.get_process(pid).to_dict()
 
     def close_process(
-        self, p: Process, succeeded: bool, output: list[Any], errors: list[str]
+        self,
+        p: Process,
+        succeeded: bool,
+        output: list[Any],
+        errors: list[str],
+        expected_executorid: str | None = None,
     ) -> None:
         """Close + stateless DAG propagation (paper §3.4.2).
 
-        No synchronization needed: exactly one executor owns the process.
+        Serialized against assign/failsafe on the colony lock: the process
+        is re-read and CAS-checked (still RUNNING, still owned by
+        ``expected_executorid``) before any mutation, so a failsafe reset
+        that interleaved after the caller's precheck turns this into a
+        clean ConflictError instead of silently overwriting a re-queued
+        or re-assigned process.
         """
-        p.state = SUCCESSFUL if succeeded else FAILED
-        p.endtime_ns = now_ns()
-        p.output = list(output)
-        p.errors = list(errors)
-        p.deadline_ns = 0
-        self.db.update_process(p)
-        if succeeded:
-            for child_id in p.children:
-                self._maybe_release_child(child_id)
-        else:
-            # Fail descendants so workflows terminate instead of hanging.
-            self._fail_descendants(p, f"parent process {p.processid} failed")
-        self._notify_queue()
+        released: list[tuple[str, str]] = []
+        with self.db.colony_lock(p.colonyname):
+            fresh = self.db.get_process(p.processid)
+            if fresh.state != RUNNING:
+                raise ConflictError("process is not running")
+            if (
+                expected_executorid is not None
+                and fresh.assignedexecutorid != expected_executorid
+            ):
+                raise ConflictError("process is not assigned to this executor")
+            fresh.state = SUCCESSFUL if succeeded else FAILED
+            fresh.endtime_ns = now_ns()
+            fresh.output = list(output)
+            fresh.errors = list(errors)
+            fresh.deadline_ns = 0
+            self.db.update_process(fresh)
+            if succeeded:
+                for child_id in fresh.children:
+                    child = self._maybe_release_child(child_id)
+                    if child is not None:
+                        released.append(self._queue_key(child))
+            else:
+                # Fail descendants so workflows terminate instead of hanging.
+                self._fail_descendants(fresh, f"parent process {fresh.processid} failed")
+        if released:
+            self._notify_queue(released)
 
-    def _maybe_release_child(self, child_id: str) -> None:
+    def _maybe_release_child(self, child_id: str) -> Process | None:
         child = self.db.get_process(child_id)
         if not child.wait_for_parents:
-            return
+            return None
         for parent_id in child.parents:
             if self.db.get_process(parent_id).state != SUCCESSFUL:
-                return
+                return None
         child.wait_for_parents = False
         self.db.update_process(child)
         if hasattr(self.db, "requeue"):
             self.db.requeue(child)
+        return child
 
     def _fail_descendants(self, p: Process, reason: str) -> None:
         for child_id in p.children:
@@ -406,7 +508,8 @@ class ColoniesServer:
         self.db.add_process(child)
         parent.children = parent.children + [child.processid]
         self.db.update_process(parent)
-        self._notify_queue()
+        if not child.wait_for_parents:
+            self._notify_queue([self._queue_key(child)])
         return child.to_dict()
 
     # -- introspection ---------------------------------------------------------
@@ -428,46 +531,81 @@ class ColoniesServer:
     def _h_stats(self, identity: str, payload: dict) -> dict:
         colony = payload["colonyname"]
         self._require_member(identity, colony)
-        stats = {s: 0 for s in (WAITING, RUNNING, SUCCESSFUL, FAILED)}
-        for p in self.db.list_processes(colony, count=10**9):
-            stats[p.state] += 1
+        # O(1) counter read — total over every state ever observed, so a
+        # process in an unexpected state can never KeyError the endpoint.
+        stats: dict[str, int] = {s: 0 for s in STATES}
+        for state, n in self.db.colony_stats(colony).items():
+            stats[state] = stats.get(state, 0) + n
         stats["executors"] = len(self.db.list_executors(colony))
         return stats
 
     # -- failsafe (paper §3.4) --------------------------------------------------
     def failsafe_scan(self) -> dict:
-        """One stateless scan pass; returns counters (also used by tests)."""
+        """One failsafe pass; returns counters (also used by tests).
+
+        The deadline indexes hand back only expired processes, and each
+        mutation re-validates under the colony lock so a concurrent close
+        (or another replica's scan) can't be clobbered.
+        """
         ts = now_ns()
         reset = failed = expired = 0
+        woken: list[tuple[str, str]] = []
         for p in self.db.running_past_deadline(ts):
-            if p.retries + 1 > max(p.spec.maxretries, 0):
-                p.state = FAILED
-                p.endtime_ns = ts
-                p.errors = p.errors + ["maxretries exceeded after maxexectime reset"]
-                self.db.update_process(p)
-                self._fail_descendants(p, f"parent process {p.processid} failed")
-                failed += 1
-            else:
-                # Reset back to the queue — another executor will pick it up.
-                p.state = WAITING
-                p.isassigned = False
-                p.assignedexecutorid = ""
-                p.starttime_ns = 0
-                p.deadline_ns = 0
-                p.retries += 1
-                self.db.update_process(p)
-                if hasattr(self.db, "requeue"):
-                    self.db.requeue(p)
-                reset += 1
+            with self.db.colony_lock(p.colonyname):
+                try:
+                    cur = self.db.get_process(p.processid)
+                except NotFoundError:
+                    continue
+                if (
+                    cur.state != RUNNING
+                    or not cur.deadline_ns
+                    or cur.deadline_ns >= ts
+                ):
+                    continue  # closed or re-assigned since the index read
+                if cur.retries + 1 > max(cur.spec.maxretries, 0):
+                    cur.state = FAILED
+                    cur.endtime_ns = ts
+                    cur.errors = cur.errors + [
+                        "maxretries exceeded after maxexectime reset"
+                    ]
+                    self.db.update_process(cur)
+                    self._fail_descendants(
+                        cur, f"parent process {cur.processid} failed"
+                    )
+                    failed += 1
+                else:
+                    # Reset back to the queue — another executor picks it up.
+                    cur.state = WAITING
+                    cur.isassigned = False
+                    cur.assignedexecutorid = ""
+                    cur.starttime_ns = 0
+                    cur.deadline_ns = 0
+                    cur.retries += 1
+                    self.db.update_process(cur)
+                    if hasattr(self.db, "requeue"):
+                        self.db.requeue(cur)
+                    woken.append(self._queue_key(cur))
+                    reset += 1
         for p in self.db.waiting_past_deadline(ts):
-            p.state = FAILED
-            p.endtime_ns = ts
-            p.errors = p.errors + ["maxwaittime exceeded"]
-            self.db.update_process(p)
-            self._fail_descendants(p, f"parent process {p.processid} failed")
-            expired += 1
-        if reset:
-            self._notify_queue()
+            with self.db.colony_lock(p.colonyname):
+                try:
+                    cur = self.db.get_process(p.processid)
+                except NotFoundError:
+                    continue
+                if (
+                    cur.state != WAITING
+                    or not cur.waitdeadline_ns
+                    or cur.waitdeadline_ns >= ts
+                ):
+                    continue
+                cur.state = FAILED
+                cur.endtime_ns = ts
+                cur.errors = cur.errors + ["maxwaittime exceeded"]
+                self.db.update_process(cur)
+                self._fail_descendants(cur, f"parent process {cur.processid} failed")
+                expired += 1
+        if woken:
+            self._notify_queue(woken)
         return {"reset": reset, "failed": failed, "waitexpired": expired}
 
     def start_background(self, failsafe_interval: float = 0.25) -> None:
@@ -491,12 +629,33 @@ class ColoniesServer:
         if self._failsafe_thread is not None:
             self._failsafe_thread.join(timeout=2)
 
-    def _notify_queue(self) -> None:
-        with self._queue_cv:
-            self._queue_cv.notify_all()
+    # -- queue wakeups -------------------------------------------------------
+    @staticmethod
+    def _queue_key(p: Process) -> tuple[str, str]:
+        return (p.colonyname, p.spec.conditions.executortype)
+
+    def _signal(self, key: tuple[str, str]) -> _QueueSignal:
+        with self._signals_guard:
+            sig = self._signals.get(key)
+            if sig is None:
+                sig = self._signals[key] = _QueueSignal()
+            return sig
+
+    def _notify_queue(self, keys: list[tuple[str, str]] | None = None) -> None:
+        """Wake long-poll waiters. ``keys=None`` (extensions, stop) wakes all."""
+        if keys is None:
+            with self._signals_guard:
+                sigs = list(self._signals.values())
+        else:
+            sigs = [self._signal(k) for k in set(keys)]
+        for sig in sigs:
+            with sig.cv:
+                sig.version += 1
+                sig.cv.notify_all()
 
     # -- HA wiring ----------------------------------------------------------------
     def set_leader_check(self, fn: Callable[[], bool]) -> None:
+        self._ha = True
         self._is_leader = fn
 
     def set_assign_proposer(self, fn: Callable[[dict], None]) -> None:

@@ -1,0 +1,362 @@
+"""Broker-scale regression tests: the indexed core does bounded work.
+
+10k-process scenarios assert that ``colonystats`` reads counters (never a
+table scan), the failsafe pops only expired deadline-heap entries, and the
+candidate queues side-line blocked/targeted processes and actually evict
+stale entries — the O(n)-per-tick behaviours of the seed broker stay gone.
+"""
+
+import pytest
+
+from repro.core import (
+    Colonies,
+    Crypto,
+    FunctionSpec,
+    InProcTransport,
+    MemoryDatabase,
+    SqliteDatabase,
+)
+from repro.core.cluster import standalone_server
+from repro.core.process import FAILED, RUNNING, SUCCESSFUL, WAITING, Process, now_ns
+
+
+def _spec(colony="scale", etype="worker", priority=0, names=None, **kw):
+    d = {
+        "conditions": {
+            "colonyname": colony,
+            "executortype": etype,
+            "executornames": names or [],
+        },
+        "funcname": "echo",
+        "priority": priority,
+    }
+    d.update(kw)
+    return FunctionSpec.from_dict(d)
+
+
+def _proc(state=WAITING, ts=None, **kw):
+    p = Process.create(_spec(**kw), submission_ns=ts)
+    p.state = state
+    return p
+
+
+# ---------------------------------------------------------------------------
+# colonystats: O(1) counters, total over every state
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("db_factory", [MemoryDatabase, SqliteDatabase])
+def test_colonystats_counter_backed_at_10k(db_factory, monkeypatch):
+    server_prv = Crypto.prvkey()
+    colony_prv = Crypto.prvkey()
+    db = db_factory()
+    srv = standalone_server(Crypto.id(server_prv), db, verify_signatures=False)
+    client = Colonies(InProcTransport([srv]), insecure=True)
+    client.add_colony("scale", Crypto.id(colony_prv), server_prv)
+
+    n = 10_000 if db_factory is MemoryDatabase else 2_000
+    mix = (WAITING, RUNNING, SUCCESSFUL, FAILED, WAITING)
+    for i in range(n):
+        db.add_process(_proc(state=mix[i % len(mix)]))
+
+    # The handler must never fall back to scanning the process table.
+    def no_scan(*a, **kw):
+        raise AssertionError("colonystats scanned the process table")
+
+    monkeypatch.setattr(db, "list_processes", no_scan)
+    stats = client.stats("scale", colony_prv)
+    assert stats["waiting"] == 2 * (n // 5)
+    assert stats["running"] == n // 5
+    assert stats["successful"] == n // 5
+    assert stats["failed"] == n // 5
+    srv.stop()
+
+
+@pytest.mark.parametrize("db_factory", [MemoryDatabase, SqliteDatabase])
+def test_colonystats_total_over_unknown_states(db_factory):
+    """A process in a state outside the four counted ones must not
+    KeyError the endpoint (seed bug) — it shows up as its own bucket."""
+    server_prv = Crypto.prvkey()
+    colony_prv = Crypto.prvkey()
+    db = db_factory()
+    srv = standalone_server(Crypto.id(server_prv), db, verify_signatures=False)
+    client = Colonies(InProcTransport([srv]), insecure=True)
+    client.add_colony("scale", Crypto.id(colony_prv), server_prv)
+    db.add_process(_proc(state=WAITING))
+    db.add_process(_proc(state="quarantined"))
+    stats = client.stats("scale", colony_prv)
+    assert stats["waiting"] == 1 and stats["quarantined"] == 1
+    srv.stop()
+
+
+def test_counters_track_full_lifecycle():
+    db = MemoryDatabase()
+    procs = [_proc() for _ in range(50)]
+    for p in procs:
+        db.add_process(p)
+    assert db.colony_stats("scale") == {WAITING: 50}
+    for p in procs[:30]:
+        p.state = RUNNING
+        db.update_process(p)
+    for p in procs[:10]:
+        p.state = SUCCESSFUL
+        db.update_process(p)
+    assert db.colony_stats("scale") == {WAITING: 20, RUNNING: 20, SUCCESSFUL: 10}
+    db.delete_process(procs[0].processid)  # successful one
+    db.delete_process(procs[45].processid)  # waiting one
+    assert db.colony_stats("scale") == {WAITING: 19, RUNNING: 20, SUCCESSFUL: 9}
+
+
+# ---------------------------------------------------------------------------
+# failsafe: deadline heaps pop only expired entries
+# ---------------------------------------------------------------------------
+
+
+def test_failsafe_bounded_work_at_10k():
+    server_prv = Crypto.prvkey()
+    db = MemoryDatabase()
+    srv = standalone_server(Crypto.id(server_prv), db, verify_signatures=False)
+    ts = now_ns()
+    far = ts + 3600 * 10**9
+    for i in range(10_000):  # healthy running fleet — never expired
+        p = _proc(state=RUNNING)
+        p.deadline_ns = far + i
+        db.add_process(p)
+    expired_exec = []
+    for _ in range(5):  # crashed executors
+        p = _proc(state=RUNNING, maxretries=2)
+        p.deadline_ns = ts - 10**9
+        db.add_process(p)
+        expired_exec.append(p)
+    for _ in range(3):  # queued past maxwaittime
+        p = _proc(state=WAITING)
+        p.waitdeadline_ns = ts - 10**9
+        db.add_process(p)
+
+    db.metrics["deadline_pops"] = 0
+    counters = srv.failsafe_scan()
+    assert counters["reset"] == 5 and counters["waitexpired"] == 3
+    # bounded: only the expired entries (and their revalidation) were popped,
+    # not the 10k healthy processes
+    assert db.metrics["deadline_pops"] <= 2 * (5 + 3)
+    for p in expired_exec:
+        assert p.state == WAITING and p.retries == 1
+
+    # a second scan immediately after does near-zero work: it only drains
+    # the now-stale entries of the 5 reset + 3 expired processes
+    db.metrics["deadline_pops"] = 0
+    counters = srv.failsafe_scan()
+    assert counters == {"reset": 0, "failed": 0, "waitexpired": 0}
+    assert db.metrics["deadline_pops"] <= 5 + 3
+    srv.stop()
+
+
+def test_failsafe_work_independent_of_fleet_size():
+    """Same number of expired processes -> same heap pops at 100 and 10k."""
+    pops = {}
+    for fleet in (100, 10_000):
+        server_prv = Crypto.prvkey()
+        db = MemoryDatabase()
+        srv = standalone_server(Crypto.id(server_prv), db, verify_signatures=False)
+        ts = now_ns()
+        for i in range(fleet):
+            p = _proc(state=RUNNING)
+            p.deadline_ns = ts + 3600 * 10**9 + i
+            db.add_process(p)
+        for _ in range(4):
+            p = _proc(state=RUNNING)
+            p.deadline_ns = ts - 10**9
+            db.add_process(p)
+        db.metrics["deadline_pops"] = 0
+        srv.failsafe_scan()
+        pops[fleet] = db.metrics["deadline_pops"]
+        srv.stop()
+    assert pops[100] == pops[10_000]
+
+
+# ---------------------------------------------------------------------------
+# candidates: purity, side-listing, stale eviction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("db_factory", [MemoryDatabase, SqliteDatabase])
+def test_candidates_never_blocked_or_wrongly_targeted(db_factory):
+    db = db_factory()
+    base = now_ns()
+    blocked, pinned_other, pinned_me, open_procs = [], [], [], []
+    for i in range(200):  # oldest: would pin the seed queue head
+        p = _proc(ts=base - 10**9 + i)
+        p.wait_for_parents = True
+        db.add_process(p)
+        blocked.append(p.processid)
+    for i in range(200):
+        p = _proc(ts=base - 5 * 10**8 + i, names=["someone-else"])
+        db.add_process(p)
+        pinned_other.append(p.processid)
+    for i in range(3):
+        p = _proc(ts=base + i, names=["me"])
+        db.add_process(p)
+        pinned_me.append(p.processid)
+    for i in range(3):
+        p = _proc(ts=base + 100 + i)
+        db.add_process(p)
+        open_procs.append(p.processid)
+
+    got = db.candidates("scale", "worker", "me", limit=8)
+    got_ids = [p.processid for p in got]
+    assert got_ids == pinned_me + open_procs  # priority order, nothing else
+    for p in got:
+        assert p.queue_ready
+        assert not p.spec.conditions.executornames or "me" in p.spec.conditions.executornames
+
+    # an unrelated executor sees only the open processes
+    got2 = db.candidates("scale", "worker", "other-worker", limit=8)
+    assert [p.processid for p in got2] == open_procs
+
+
+def test_stale_entries_are_evicted():
+    db = MemoryDatabase()
+    procs = [_proc(ts=now_ns() + i) for i in range(1000)]
+    for p in procs:
+        db.add_process(p)
+    shard = db._shard("scale")
+    assert len(shard.queues["worker"]) == 1000
+
+    # 600 processes close without ever being dequeued -> entries go stale;
+    # once stale entries dominate (501*2 > 1000), the whole queue is rebuilt
+    # in one pass, and the 99 stragglers stay until scanned or re-dominant.
+    for p in procs[:600]:
+        p.state = SUCCESSFUL
+        db.update_process(p)
+    assert len(shard.queues["worker"]) == 499
+    assert db.metrics["compactions"] >= 1
+
+    # the next candidate scan walks the head, finds the 99 leftover stale
+    # entries ahead of the live ones, and evicts the whole scanned prefix
+    # in a single rebuild (no repeated list.remove)
+    before = db.metrics["stale_evicted"]
+    got = db.candidates("scale", "worker", "w", limit=8)
+    assert len(got) == 8
+    assert db.metrics["stale_evicted"] == before + 99
+    assert len(shard.queues["worker"]) == 400
+
+    # a handful more go stale mid-head: evicted by the following scan
+    for p in procs[600:620]:
+        p.state = FAILED
+        db.update_process(p)
+    got = db.candidates("scale", "worker", "w", limit=8)
+    assert len(got) == 8
+    assert len(shard.queues["worker"]) == 380
+
+
+def test_requeue_is_duplicate_free():
+    db = MemoryDatabase()
+    p = _proc()
+    db.add_process(p)
+    db.requeue(p)
+    db.requeue(p)
+    shard = db._shard("scale")
+    assert len(shard.queues["worker"]) == 1
+
+
+@pytest.mark.parametrize("db_factory", [MemoryDatabase, SqliteDatabase])
+def test_released_child_reenters_queue(db_factory):
+    """wait_for_parents processes are side-lined, then become assignable
+    exactly when released (requeue path)."""
+    db = db_factory()
+    child = _proc()
+    child.wait_for_parents = True
+    db.add_process(child)
+    assert db.candidates("scale", "worker", "w") == []
+    child.wait_for_parents = False
+    db.update_process(child)
+    db.requeue(child)
+    assert [p.processid for p in db.candidates("scale", "worker", "w")] == [
+        child.processid
+    ]
+
+
+def test_multi_target_stale_entries_compact():
+    """A process pinned to k executors leaves k queue entries; the stale
+    estimate must count all of them or side queues never compact."""
+    db = MemoryDatabase()
+    procs = [_proc(names=["a", "b"]) for _ in range(200)]
+    for p in procs:
+        db.add_process(p)
+    shard = db._shard("scale")
+    assert len(shard.targeted["worker"]["a"]) == 200
+    assert len(shard.targeted["worker"]["b"]) == 200
+    for p in procs:  # all close without either side queue being scanned
+        p.state = SUCCESSFUL
+        db.update_process(p)
+    assert db.metrics["compactions"] >= 1
+    # executor "b" never polls, yet its side queue must not leak forever
+    assert len(shard.targeted.get("worker", {}).get("b", [])) < 200
+
+
+def test_sqlite_migration_backfills_targets(tmp_path):
+    """Opening a pre-`targets`-column db file must backfill pinning from the
+    body JSON — otherwise old pinned processes become assignable by anyone."""
+    import json
+    import sqlite3
+
+    path = str(tmp_path / "old.db")
+    pinned = _proc(names=["gpu-1"])
+    open_p = _proc()
+    conn = sqlite3.connect(path)
+    conn.executescript(
+        """
+        CREATE TABLE processes (
+            processid TEXT PRIMARY KEY, colonyname TEXT NOT NULL,
+            executortype TEXT NOT NULL, state TEXT NOT NULL,
+            waitforparents INTEGER NOT NULL DEFAULT 0,
+            prioritytime INTEGER NOT NULL, deadline INTEGER NOT NULL DEFAULT 0,
+            waitdeadline INTEGER NOT NULL DEFAULT 0, body TEXT NOT NULL
+        );
+        """
+    )
+    for p in (pinned, open_p):
+        conn.execute(
+            "INSERT INTO processes VALUES (?,?,?,?,?,?,?,?,?)",
+            (p.processid, p.colonyname, "worker", p.state, 0, p.priority_time,
+             0, 0, p.to_json()),
+        )
+    conn.commit()
+    conn.close()
+
+    db = SqliteDatabase(path)
+    got = [p.processid for p in db.candidates("scale", "worker", "cpu-9")]
+    assert got == [open_p.processid]  # the gpu-pinned process stays invisible
+    got = [p.processid for p in db.candidates("scale", "worker", "gpu-1")]
+    assert set(got) == {pinned.processid, open_p.processid}
+
+
+def test_ha_assign_confirms_apply_won():
+    """If the Raft apply lost its CAS (conflict swallowed by the cluster),
+    assign must not hand the executor an unassigned process."""
+    from repro.core import ColoniesServer
+    from repro.core.process import Executor
+
+    db = MemoryDatabase()
+    srv = ColoniesServer("srv", db, verify_signatures=False)
+    srv.set_assign_proposer(lambda op: None)  # proposal commits, apply loses
+    db.add_process(_proc())
+    ex = Executor(executorid="e1", executorname="w", executortype="worker",
+                  colonyname="scale", state="approved")
+    assert srv._try_assign_once("scale", ex) is None
+
+
+def test_backends_agree_on_candidate_order():
+    dbs = [MemoryDatabase(), SqliteDatabase()]
+    base = now_ns()
+    specs = [(base + i * 1000, i % 3) for i in range(60)]
+    for ts, prio in specs:
+        spec = _spec(priority=prio)
+        for db in dbs:
+            db.add_process(Process.create(spec, submission_ns=ts))
+    orders = [
+        [(p.priority_time) for p in db.candidates("scale", "worker", "w", limit=30)]
+        for db in dbs
+    ]
+    assert orders[0] == orders[1]
+    assert orders[0] == sorted(orders[0])

@@ -1,7 +1,11 @@
 """Zero-trust crypto layer (paper §3.4.6)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dependency — only the property test below needs it
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
 
 from repro.core.crypto import Crypto, N, Signature
 
@@ -53,9 +57,19 @@ def test_malformed_signature_rejected():
     assert not Crypto.verify(b"x", "00" * 65, "ab" * 32)
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.binary(min_size=0, max_size=200), st.integers(min_value=1, max_value=N - 1))
-def test_property_recover_matches_identity(msg, d):
-    prv = d.to_bytes(32, "big").hex()
-    sig = Crypto.sign(msg, prv)
-    assert Crypto.recover(msg, sig) == Crypto.id(prv)
+if given is not None:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        st.binary(min_size=0, max_size=200), st.integers(min_value=1, max_value=N - 1)
+    )
+    def test_property_recover_matches_identity(msg, d):
+        prv = d.to_bytes(32, "big").hex()
+        sig = Crypto.sign(msg, prv)
+        assert Crypto.recover(msg, sig) == Crypto.id(prv)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_recover_matches_identity():
+        pass

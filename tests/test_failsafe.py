@@ -69,6 +69,40 @@ def test_stale_executor_close_rejected(colony):
     assert client.get_process(p["processid"], colony["colony_prv"])["out"] == ["fresh result"]
 
 
+def test_close_racing_failsafe_reset_is_rejected(colony, monkeypatch):
+    """Deterministic close/failsafe interleaving: the failsafe fires in the
+    window between ``_h_close``'s ownership precheck and the state mutation.
+    The close must fail with ConflictError and the reset must survive —
+    on the unsynchronized seed path the stale close silently overwrote the
+    re-queued process (losing the retry)."""
+    client, srv = colony["client"], colony["server"]
+    ex1 = ExecutorBase(client, "dev", "w-race", "worker", colony_prvkey=colony["colony_prv"])
+    p = client.submit(spec(maxexectime=1, maxretries=3), colony["colony_prv"])
+    pd = client.assign("dev", 2.0, ex1.prvkey)
+    assert pd["processid"] == p["processid"]
+    time.sleep(1.1)  # lease expired; the background failsafe hasn't run yet
+
+    real_close = srv.close_process
+
+    def close_after_failsafe(proc, succeeded, output, errors, *a, **kw):
+        # Simulates the racy schedule: _h_close already validated ownership,
+        # then the failsafe scanner resets the process, then close proceeds.
+        counters = srv.failsafe_scan()
+        assert counters["reset"] == 1
+        return real_close(proc, succeeded, output, errors, *a, **kw)
+
+    monkeypatch.setattr(srv, "close_process", close_after_failsafe)
+    with pytest.raises(ConflictError):
+        client.close(p["processid"], ["stale result"], ex1.prvkey)
+    after = client.get_process(p["processid"], colony["colony_prv"])
+    assert after["state"] == "waiting" and after["retries"] == 1
+    # the re-queued process is still assignable by a healthy executor
+    ex2 = ExecutorBase(client, "dev", "w-race2", "worker", colony_prvkey=colony["colony_prv"])
+    monkeypatch.setattr(srv, "close_process", real_close)
+    pd2 = client.assign("dev", 2.0, ex2.prvkey)
+    assert pd2["processid"] == p["processid"]
+
+
 def test_maxwaittime_expires_queued_process(colony):
     client, srv = colony["client"], colony["server"]
     p = client.submit(spec(maxwaittime=1), colony["colony_prv"])

@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
