@@ -1,0 +1,88 @@
+"""CFS metadata-plane scaling (paper §3.4.5): ops must be flat in table size.
+
+The colony holds ``total`` file revisions, almost all of them cold bulk
+data spread over many labels; a fixed 100-file ``/hot`` subtree is the
+working set. ``getfile``/``getfiles``/``createsnapshot`` against the hot
+subtree must cost the same no matter how much cold data the colony has
+accumulated — the seed implementation ``kv_list``-scanned every file in
+every colony on each of these RPCs, so its latency grew linearly with
+``total``.
+
+Also probes ``removefile``'s pin check (refcount read, not a scan over
+every snapshot) with many snapshots present.
+"""
+
+from __future__ import annotations
+
+from repro.core import Colonies, Crypto, InProcTransport, MemoryDatabase, SqliteDatabase
+from repro.core.cluster import standalone_server
+
+from .common import Row, timeit
+
+HOT_FILES = 100
+
+
+def _setup(db):
+    server_prv, colony_prv = Crypto.prvkey(), Crypto.prvkey()
+    srv = standalone_server(Crypto.id(server_prv), db, verify_signatures=False)
+    client = Colonies(InProcTransport([srv]), insecure=True)
+    client.add_colony("bench", Crypto.id(colony_prv), server_prv)
+    return srv, client, colony_prv
+
+
+def _fill(client, colony_prv, total: int) -> None:
+    """HOT_FILES files under /hot; the rest cold, fanned over 64 labels."""
+    for i in range(HOT_FILES):
+        client.add_file(
+            {"colonyname": "bench", "label": "/hot", "name": f"h{i:04d}.bin",
+             "size": 1, "checksum": f"{i:064x}",
+             "storage": {"backend": "mem", "url": f"mem://{i:064x}"}},
+            colony_prv,
+        )
+    for i in range(total - HOT_FILES):
+        client.add_file(
+            {"colonyname": "bench", "label": f"/bulk/shard-{i % 64:02d}",
+             "name": f"c{i:06d}.bin", "size": 1, "checksum": f"{i:064x}",
+             "storage": {"backend": "mem", "url": f"mem://{i:064x}"}},
+            colony_prv,
+        )
+
+
+def run() -> None:
+    for db_name, db_factory in (("memdb", MemoryDatabase), ("sqlite", SqliteDatabase)):
+        for total in (100, 10_000):
+            srv, client, colony_prv = _setup(db_factory())
+            _fill(client, colony_prv, total)
+            us = timeit(
+                lambda: client.get_file("bench", "/hot", "h0050.bin", colony_prv), 100
+            )
+            Row.add(f"cfs_getfile_{db_name}_total_{total}", us, "head lookup")
+            us = timeit(lambda: client.get_files("bench", "/hot", colony_prv), 50)
+            Row.add(
+                f"cfs_getfiles_{db_name}_total_{total}", us,
+                f"{HOT_FILES}-file subtree listing",
+            )
+            us = timeit(
+                lambda: client.create_snapshot("bench", "/hot", "s", colony_prv), 50
+            )
+            Row.add(
+                f"cfs_snapshot_{db_name}_total_{total}", us,
+                f"pin {HOT_FILES}-file subtree",
+            )
+            # removefile pin check with many snapshots on the books: add/remove
+            # an unpinned scratch file (the snapshots above pinned /hot only).
+            def pin_cycle():
+                meta = client.add_file(
+                    {"colonyname": "bench", "label": "/scratch", "name": "x",
+                     "size": 1, "checksum": "0" * 64,
+                     "storage": {"backend": "mem", "url": "mem://" + "0" * 64}},
+                    colony_prv,
+                )
+                client.remove_file("bench", meta["fileid"], colony_prv)
+
+            us = timeit(pin_cycle, 50)
+            Row.add(
+                f"cfs_add_remove_{db_name}_total_{total}", us,
+                "pin check vs 50+ snapshots",
+            )
+            srv.stop()

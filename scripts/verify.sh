@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 quick suite + the broker hot-path benchmark.
+# CI entry point: tier-1 quick suite + the broker and CFS hot-path benchmarks.
 #
 #   scripts/verify.sh          # quick suite (skips @slow compile tests)
 #   scripts/verify.sh --full   # everything, including @slow
@@ -13,4 +13,4 @@ else
     python -m pytest -q -m "not slow"
 fi
 
-python -m benchmarks.run broker
+python -m benchmarks.run broker cfs

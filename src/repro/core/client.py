@@ -236,6 +236,11 @@ class Colonies:
     def get_files(self, colonyname: str, label: str, prvkey: str) -> list[dict]:
         return self._rpc("getfiles", {"colonyname": colonyname, "label": label}, prvkey)
 
+    def remove_file(self, colonyname: str, fileid: str, prvkey: str) -> dict:
+        return self._rpc(
+            "removefile", {"colonyname": colonyname, "fileid": fileid}, prvkey
+        )
+
     def create_snapshot(self, colonyname: str, label: str, name: str, prvkey: str) -> dict:
         return self._rpc(
             "createsnapshot",

@@ -35,19 +35,27 @@ CRON_TABLE = "crons"
 def _parse_field(expr: str, lo: int, hi: int) -> set[int]:
     out: set[int] = set()
     for part in expr.split(","):
+        orig = part
         step = 1
         if "/" in part:
             part, step_s = part.split("/", 1)
             step = int(step_s)
+            if step <= 0:
+                raise ValidationError(f"cron step must be positive in {expr!r}")
         if part in ("*", ""):
-            rng = range(lo, hi + 1)
+            start, stop = lo, hi
         elif "-" in part:
             a, b = part.split("-", 1)
-            rng = range(int(a), int(b) + 1)
+            start, stop = int(a), int(b)
         else:
-            rng = range(int(part), int(part) + 1)
-        for v in rng:
-            if lo <= v <= hi and (v - lo) % step == 0:
+            # Vixie expands a lone number before '/' to an N-to-max range:
+            # '5/15' in the minute field is {5, 20, 35, 50}, not {5}.
+            start = int(part)
+            stop = hi if "/" in orig else start
+        # Steps anchor at the range start (standard cron): 11-20/5 is
+        # {11, 16}, not the field-minimum-anchored {15, 20}.
+        for v in range(start, stop + 1, step):
+            if lo <= v <= hi:
                 out.add(v)
     if not out:
         raise ValidationError(f"empty cron field {expr!r}")
@@ -63,16 +71,29 @@ def next_cron_deadline_ns(cronexpr: str, after_ns: int) -> int:
     hours = _parse_field(fields[1], 0, 23)
     doms = _parse_field(fields[2], 1, 31)
     months = _parse_field(fields[3], 1, 12)
-    dows = _parse_field(fields[4], 0, 6)  # 0 = Monday (python weekday)
+    # Standard cron day-of-week: 0 = Sunday, with 7 accepted as Sunday too.
+    # Python's tm_wday is 0 = Monday, so translate at match time.
+    dows = {d % 7 for d in _parse_field(fields[4], 0, 7)}
+    # Vixie-cron day rule: if BOTH day fields are restricted, a day matches
+    # when EITHER does ('0 0 13 * 5' = every 13th and every Friday, not
+    # just Friday-the-13th); otherwise the restricted one decides. Like
+    # Vixie's DOM_STAR/DOW_STAR, a '*'-prefixed field ('*/2') counts as a
+    # star field even though it constrains the match.
+    dom_any = fields[2].strip().startswith("*")
+    dow_any = fields[4].strip().startswith("*")
     t = (after_ns // (60 * 10**9) + 1) * 60  # next minute boundary, seconds
     for _ in range(366 * 24 * 60):  # bounded search: one year of minutes
         st = time.localtime(t)
+        dom_ok = st.tm_mday in doms
+        dow_ok = (st.tm_wday + 1) % 7 in dows
+        day_ok = (dom_ok or dow_ok) if not dom_any and not dow_any else (
+            dom_ok and dow_ok
+        )
         if (
             st.tm_min in minutes
             and st.tm_hour in hours
-            and st.tm_mday in doms
             and st.tm_mon in months
-            and st.tm_wday in dows
+            and day_ok
         ):
             return t * 10**9
         t += 60

@@ -141,6 +141,48 @@ class Database:
         """Per-colony critical-section lock, shared by all replicas on this db."""
         raise NotImplementedError
 
+    # -- CFS metadata plane (fs.py; paper §3.4.5) ---------------------------
+    # Indexed per colony so no operation ever scans the whole file table:
+    # label trees answer subtree listings, (label, name) revision heads
+    # answer lookups/next-revision, and pin refcounts answer removal checks.
+    def cfs_add_file(self, entry: dict) -> dict:
+        """Store a new revision; assigns ``entry['revision']`` = head + 1."""
+        raise NotImplementedError
+
+    def cfs_get_file(self, colony: str, fileid: str) -> dict | None:
+        raise NotImplementedError
+
+    def cfs_get_files_by_ids(self, colony: str, fileids: list[str]) -> list[dict | None]:
+        """Batched lookup, one entry per id in order (None where absent)."""
+        raise NotImplementedError
+
+    def cfs_head(self, colony: str, label: str, name: str) -> dict | None:
+        """Latest revision of (label, name), or None."""
+        raise NotImplementedError
+
+    def cfs_list(self, colony: str, label: str) -> list[dict]:
+        """Latest revisions at ``label`` and below, sorted by (label, name)."""
+        raise NotImplementedError
+
+    def cfs_remove_file(self, colony: str, fileid: str) -> dict | None:
+        """Remove one revision; ConflictError if pinned, None if absent."""
+        raise NotImplementedError
+
+    def cfs_pin_count(self, colony: str, fileid: str) -> int:
+        """How many live snapshots pin this revision (O(1)/indexed)."""
+        raise NotImplementedError
+
+    def cfs_create_snapshot(self, snap: dict) -> dict:
+        """Atomically pin the heads under ``snap['label']``; fills 'fileids'."""
+        raise NotImplementedError
+
+    def cfs_get_snapshot(self, colony: str, snapshotid: str) -> dict | None:
+        raise NotImplementedError
+
+    def cfs_remove_snapshot(self, colony: str, snapshotid: str) -> dict | None:
+        """Remove a snapshot and release its pins; None if absent."""
+        raise NotImplementedError
+
     # -- key/value side tables (cron, generators, CFS metadata) -------------
     def kv_put(self, table: str, key: str, value: dict) -> None:
         raise NotImplementedError
@@ -208,6 +250,32 @@ class _ColonyShard:
         self.wait_pushed: dict[str, int] = {}
 
 
+class _CfsShard:
+    """One colony's CFS metadata, guarded by one lock.
+
+    ``by_label`` is the revision index: label -> name -> ascending
+    ``(revision, fileid)`` list whose tail is the head revision.
+    ``children`` is the label tree: label -> immediate child labels, so a
+    subtree listing walks exactly the labels under the query prefix.
+    ``pins`` maps fileid -> the set of snapshot ids pinning it (refcount =
+    set size), making the removal check O(1) instead of a snapshot scan.
+    """
+
+    __slots__ = ("lock", "files", "by_label", "children", "snapshots", "pins")
+
+    def __init__(self) -> None:
+        self.lock = threading.RLock()
+        self.files: dict[str, dict] = {}
+        self.by_label: dict[str, dict[str, list[tuple[int, str]]]] = {}
+        self.children: dict[str, set[str]] = {}
+        self.snapshots: dict[str, dict] = {}
+        self.pins: dict[str, set[str]] = {}
+
+
+def _cfs_parent(label: str) -> str:
+    return label.rsplit("/", 1)[0] or "/"
+
+
 class MemoryDatabase(Database):
     def __init__(self) -> None:
         self._glock = threading.RLock()  # registries + shard map only
@@ -215,6 +283,7 @@ class MemoryDatabase(Database):
         self._executors: dict[str, Executor] = {}
         self._functions: list[dict] = []
         self._shards: dict[str, _ColonyShard] = {}
+        self._cfs_shards: dict[str, _CfsShard] = {}
         self._pid_colony: dict[str, str] = {}
         self._kv: dict[str, dict[str, dict]] = {}
         self._kvlists: dict[str, dict[str, list[dict]]] = {}
@@ -224,6 +293,7 @@ class MemoryDatabase(Database):
             "queue_scan_steps": 0,
             "stale_evicted": 0,
             "compactions": 0,
+            "cfs_nodes_visited": 0,
         }
 
     def _shard(self, colony: str) -> _ColonyShard:
@@ -231,6 +301,13 @@ class MemoryDatabase(Database):
             s = self._shards.get(colony)
             if s is None:
                 s = self._shards[colony] = _ColonyShard()
+            return s
+
+    def _cfs(self, colony: str) -> _CfsShard:
+        with self._glock:
+            s = self._cfs_shards.get(colony)
+            if s is None:
+                s = self._cfs_shards[colony] = _CfsShard()
             return s
 
     def colony_lock(self, colony: str) -> threading.RLock:
@@ -597,6 +674,145 @@ class MemoryDatabase(Database):
         with s.lock:
             return {state: n for state, n in s.counters.items() if n}
 
+    # -- CFS metadata -------------------------------------------------------
+    @staticmethod
+    def _cfs_link(s: _CfsShard, label: str) -> None:
+        """Wire a new label into the tree, up to the first existing edge."""
+        while label != "/":
+            parent = _cfs_parent(label)
+            kids = s.children.setdefault(parent, set())
+            if label in kids:
+                return
+            kids.add(label)
+            label = parent
+
+    @staticmethod
+    def _cfs_prune(s: _CfsShard, label: str) -> None:
+        """Drop now-empty labels so the tree only holds live paths."""
+        while label != "/" and not s.by_label.get(label) and not s.children.get(label):
+            s.by_label.pop(label, None)
+            s.children.pop(label, None)
+            parent = _cfs_parent(label)
+            kids = s.children.get(parent)
+            if kids is not None:
+                kids.discard(label)
+            label = parent
+
+    def cfs_add_file(self, entry: dict) -> dict:
+        s = self._cfs(entry["colonyname"])
+        label, name = entry["label"], entry["name"]
+        with s.lock:
+            new_label = label not in s.by_label and label not in s.children
+            revs = s.by_label.setdefault(label, {}).setdefault(name, [])
+            entry = dict(entry)
+            entry["revision"] = (revs[-1][0] + 1) if revs else 1
+            s.files[entry["fileid"]] = entry
+            revs.append((entry["revision"], entry["fileid"]))
+            if new_label:
+                self._cfs_link(s, label)
+            return dict(entry)
+
+    def cfs_get_file(self, colony: str, fileid: str) -> dict | None:
+        s = self._cfs(colony)
+        with s.lock:
+            e = s.files.get(fileid)
+            return dict(e) if e is not None else None
+
+    def cfs_get_files_by_ids(self, colony: str, fileids: list[str]) -> list[dict | None]:
+        s = self._cfs(colony)
+        with s.lock:  # one lock pass for the whole batch
+            return [
+                dict(e) if (e := s.files.get(fid)) is not None else None
+                for fid in fileids
+            ]
+
+    def cfs_head(self, colony: str, label: str, name: str) -> dict | None:
+        s = self._cfs(colony)
+        with s.lock:
+            revs = s.by_label.get(label, {}).get(name)
+            return dict(s.files[revs[-1][1]]) if revs else None
+
+    def cfs_list(self, colony: str, label: str) -> list[dict]:
+        s = self._cfs(colony)
+        with s.lock:
+            return self._cfs_list_locked(s, label)
+
+    def _cfs_list_locked(self, s: _CfsShard, label: str) -> list[dict]:
+        if label not in s.by_label and label not in s.children:
+            return []
+        out: list[dict] = []
+        stack = [label]
+        while stack:
+            lbl = stack.pop()
+            self.metrics["cfs_nodes_visited"] += 1
+            for revs in s.by_label.get(lbl, {}).values():
+                out.append(dict(s.files[revs[-1][1]]))
+            stack.extend(s.children.get(lbl, ()))
+        out.sort(key=lambda e: (e["label"], e["name"]))
+        return out
+
+    def cfs_remove_file(self, colony: str, fileid: str) -> dict | None:
+        s = self._cfs(colony)
+        with s.lock:
+            e = s.files.get(fileid)
+            if e is None:
+                return None
+            holders = s.pins.get(fileid)
+            if holders:
+                raise ConflictError(
+                    "file revision pinned by snapshot " + next(iter(holders))
+                )
+            del s.files[fileid]
+            names = s.by_label.get(e["label"], {})
+            revs = names.get(e["name"], [])
+            if (e["revision"], fileid) in revs:
+                revs.remove((e["revision"], fileid))
+            if not revs:
+                names.pop(e["name"], None)
+                if not names:
+                    s.by_label.pop(e["label"], None)
+                    self._cfs_prune(s, e["label"])
+            return e
+
+    def cfs_pin_count(self, colony: str, fileid: str) -> int:
+        s = self._cfs(colony)
+        with s.lock:
+            return len(s.pins.get(fileid, ()))
+
+    def cfs_create_snapshot(self, snap: dict) -> dict:
+        s = self._cfs(snap["colonyname"])
+        with s.lock:
+            # Listing + pinning under one lock: a file removed concurrently
+            # can never leave the snapshot holding a tombstone.
+            snap = dict(snap)
+            snap["fileids"] = [
+                e["fileid"] for e in self._cfs_list_locked(s, snap["label"])
+            ]
+            s.snapshots[snap["snapshotid"]] = dict(snap)
+            for fid in snap["fileids"]:
+                s.pins.setdefault(fid, set()).add(snap["snapshotid"])
+            return snap
+
+    def cfs_get_snapshot(self, colony: str, snapshotid: str) -> dict | None:
+        s = self._cfs(colony)
+        with s.lock:
+            snap = s.snapshots.get(snapshotid)
+            return dict(snap) if snap is not None else None
+
+    def cfs_remove_snapshot(self, colony: str, snapshotid: str) -> dict | None:
+        s = self._cfs(colony)
+        with s.lock:
+            snap = s.snapshots.pop(snapshotid, None)
+            if snap is None:
+                return None
+            for fid in snap["fileids"]:
+                holders = s.pins.get(fid)
+                if holders is not None:
+                    holders.discard(snapshotid)
+                    if not holders:
+                        del s.pins[fid]
+            return snap
+
     # kv
     def kv_put(self, table: str, key: str, value: dict) -> None:
         with self._glock:
@@ -668,6 +884,24 @@ CREATE TABLE IF NOT EXISTS proc_counts (
     colonyname TEXT NOT NULL, state TEXT NOT NULL, n INTEGER NOT NULL,
     PRIMARY KEY (colonyname, state)
 );
+CREATE TABLE IF NOT EXISTS cfs_files (
+    fileid TEXT PRIMARY KEY,
+    colonyname TEXT NOT NULL,
+    label TEXT NOT NULL,
+    name TEXT NOT NULL,
+    revision INTEGER NOT NULL,
+    body TEXT NOT NULL
+);
+CREATE UNIQUE INDEX IF NOT EXISTS idx_cfs_head
+    ON cfs_files (colonyname, label, name, revision);
+CREATE TABLE IF NOT EXISTS cfs_snapshots (
+    snapshotid TEXT PRIMARY KEY, colonyname TEXT NOT NULL, body TEXT NOT NULL
+);
+CREATE TABLE IF NOT EXISTS cfs_pins (
+    colonyname TEXT NOT NULL, fileid TEXT NOT NULL, snapshotid TEXT NOT NULL,
+    PRIMARY KEY (colonyname, fileid, snapshotid)
+);
+CREATE INDEX IF NOT EXISTS idx_cfs_pins_snap ON cfs_pins (colonyname, snapshotid);
 CREATE TABLE IF NOT EXISTS kv (
     tbl TEXT NOT NULL, key TEXT NOT NULL, value TEXT NOT NULL,
     PRIMARY KEY (tbl, key)
@@ -703,6 +937,7 @@ class SqliteDatabase(Database):
         self._migrate()
         self._conn.executescript(_SCHEMA)
         self._rebuild_counts_if_missing()
+        self._migrate_cfs()
         self._conn.commit()
 
     def _migrate(self) -> None:
@@ -727,6 +962,77 @@ class SqliteDatabase(Database):
                     self._conn.execute(
                         "UPDATE processes SET targets=? WHERE processid=?", (t, pid)
                     )
+
+    def _migrate_cfs(self) -> None:
+        """Backfill first-class CFS tables from the seed's kv rows.
+
+        Pre-index databases kept every file and snapshot as opaque JSON
+        under kv(tbl='cfs_files'/'cfs_snapshots'); move them into the
+        indexed tables (rebuilding pin rows from each snapshot's fileids)
+        and drop the kv copies so there is a single source of truth. The
+        kv bucket names below are frozen — they must match what old
+        database files contain, regardless of future table renames.
+        """
+        rows = self._conn.execute(
+            "SELECT value FROM kv WHERE tbl='cfs_files'"
+        ).fetchall()
+        for (val,) in rows:
+            e = json.loads(val)
+            exists = self._conn.execute(
+                "SELECT 1 FROM cfs_files WHERE fileid=?", (e["fileid"],)
+            ).fetchone()
+            if exists:
+                continue
+            e["revision"] = int(e.get("revision", 1))
+            try:
+                self._conn.execute(
+                    "INSERT INTO cfs_files VALUES (?,?,?,?,?,?)",
+                    (
+                        e["fileid"],
+                        e["colonyname"],
+                        e["label"],
+                        e["name"],
+                        e["revision"],
+                        json.dumps(e),
+                    ),
+                )
+            except sqlite3.IntegrityError:
+                # The seed computed revisions without a lock, so two adds of
+                # the same (label, name) could both claim revision N.
+                # Re-sequence the loser past the current head instead of
+                # silently dropping its metadata.
+                head = self._conn.execute(
+                    "SELECT MAX(revision) FROM cfs_files"
+                    " WHERE colonyname=? AND label=? AND name=?",
+                    (e["colonyname"], e["label"], e["name"]),
+                ).fetchone()[0]
+                e["revision"] = (head or 0) + 1
+                self._conn.execute(
+                    "INSERT INTO cfs_files VALUES (?,?,?,?,?,?)",
+                    (
+                        e["fileid"],
+                        e["colonyname"],
+                        e["label"],
+                        e["name"],
+                        e["revision"],
+                        json.dumps(e),
+                    ),
+                )
+        rows = self._conn.execute(
+            "SELECT value FROM kv WHERE tbl='cfs_snapshots'"
+        ).fetchall()
+        for (val,) in rows:
+            snap = json.loads(val)
+            self._conn.execute(
+                "INSERT OR IGNORE INTO cfs_snapshots VALUES (?,?,?)",
+                (snap["snapshotid"], snap["colonyname"], json.dumps(snap)),
+            )
+            for fid in snap.get("fileids", []):
+                self._conn.execute(
+                    "INSERT OR IGNORE INTO cfs_pins VALUES (?,?,?)",
+                    (snap["colonyname"], fid, snap["snapshotid"]),
+                )
+        self._conn.execute("DELETE FROM kv WHERE tbl IN ('cfs_files','cfs_snapshots')")
 
     def _rebuild_counts_if_missing(self) -> None:
         have = self._conn.execute("SELECT COUNT(*) FROM proc_counts").fetchone()[0]
@@ -1026,6 +1332,166 @@ class SqliteDatabase(Database):
 
     def requeue(self, p: Process) -> None:  # row update already re-queues in SQL
         pass
+
+    # -- CFS metadata -------------------------------------------------------
+
+    def cfs_add_file(self, entry: dict) -> dict:
+        with self._lock:
+            row = self._exec(
+                "SELECT revision FROM cfs_files"
+                " WHERE colonyname=? AND label=? AND name=?"
+                " ORDER BY revision DESC LIMIT 1",
+                (entry["colonyname"], entry["label"], entry["name"]),
+            ).fetchone()
+            entry = dict(entry)
+            entry["revision"] = (row[0] + 1) if row else 1
+            self._exec(
+                "INSERT INTO cfs_files VALUES (?,?,?,?,?,?)",
+                (
+                    entry["fileid"],
+                    entry["colonyname"],
+                    entry["label"],
+                    entry["name"],
+                    entry["revision"],
+                    json.dumps(entry),
+                ),
+            )
+            self._conn.commit()
+            return entry
+
+    def cfs_get_file(self, colony: str, fileid: str) -> dict | None:
+        with self._lock:
+            row = self._exec(
+                "SELECT body FROM cfs_files WHERE fileid=? AND colonyname=?",
+                (fileid, colony),
+            ).fetchone()
+            return json.loads(row[0]) if row else None
+
+    def cfs_get_files_by_ids(self, colony: str, fileids: list[str]) -> list[dict | None]:
+        found: dict[str, dict] = {}
+        with self._lock:
+            # chunked to stay under sqlite's bound-parameter limit
+            for i in range(0, len(fileids), 500):
+                chunk = fileids[i : i + 500]
+                ph = ",".join("?" * len(chunk))
+                rows = self._exec(
+                    f"SELECT fileid, body FROM cfs_files"
+                    f" WHERE colonyname=? AND fileid IN ({ph})",
+                    (colony, *chunk),
+                ).fetchall()
+                for fid, body in rows:
+                    found[fid] = json.loads(body)
+        return [found.get(fid) for fid in fileids]
+
+    def cfs_head(self, colony: str, label: str, name: str) -> dict | None:
+        with self._lock:
+            row = self._exec(
+                "SELECT body FROM cfs_files"
+                " WHERE colonyname=? AND label=? AND name=?"
+                " ORDER BY revision DESC LIMIT 1",
+                (colony, label, name),
+            ).fetchone()
+            return json.loads(row[0]) if row else None
+
+    def _cfs_list_locked(self, colony: str, label: str) -> list[dict]:
+        # Two range probes of idx_cfs_head (an OR'd predicate makes sqlite
+        # fall back to scanning the whole colony prefix): the label itself,
+        # then its descendants — exactly [label+'/', label+'0'), '0' being
+        # the code point after '/'. The exact-label rows sort first, so
+        # concatenation preserves (label, name) order. sqlite's
+        # bare-column-with-MAX rule makes body the head revision's body.
+        out = [
+            json.loads(r[0])
+            for r in self._exec(
+                "SELECT body, MAX(revision) FROM cfs_files"
+                " WHERE colonyname=? AND label=? GROUP BY name ORDER BY name",
+                (colony, label),
+            ).fetchall()
+        ]
+        # Strict lower bound: normalized labels never end in '/', so this
+        # drops nothing for non-root prefixes and keeps the root itself
+        # out of its own descendant range.
+        lo, hi = (("/", "0") if label == "/" else (label + "/", label + "0"))
+        out += [
+            json.loads(r[0])
+            for r in self._exec(
+                "SELECT body, MAX(revision) FROM cfs_files"
+                " WHERE colonyname=? AND label>? AND label<?"
+                " GROUP BY label, name ORDER BY label, name",
+                (colony, lo, hi),
+            ).fetchall()
+        ]
+        return out
+
+    def cfs_list(self, colony: str, label: str) -> list[dict]:
+        with self._lock:
+            return self._cfs_list_locked(colony, label)
+
+    def cfs_remove_file(self, colony: str, fileid: str) -> dict | None:
+        with self._lock:
+            row = self._exec(
+                "SELECT body FROM cfs_files WHERE fileid=? AND colonyname=?",
+                (fileid, colony),
+            ).fetchone()
+            if row is None:
+                return None
+            pin = self._exec(
+                "SELECT snapshotid FROM cfs_pins WHERE colonyname=? AND fileid=? LIMIT 1",
+                (colony, fileid),
+            ).fetchone()
+            if pin is not None:
+                raise ConflictError("file revision pinned by snapshot " + pin[0])
+            self._exec("DELETE FROM cfs_files WHERE fileid=?", (fileid,))
+            self._conn.commit()
+            return json.loads(row[0])
+
+    def cfs_pin_count(self, colony: str, fileid: str) -> int:
+        with self._lock:
+            return self._exec(
+                "SELECT COUNT(*) FROM cfs_pins WHERE colonyname=? AND fileid=?",
+                (colony, fileid),
+            ).fetchone()[0]
+
+    def cfs_create_snapshot(self, snap: dict) -> dict:
+        with self._lock:
+            snap = dict(snap)
+            snap["fileids"] = [
+                e["fileid"] for e in self._cfs_list_locked(snap["colonyname"], snap["label"])
+            ]
+            self._exec(
+                "INSERT INTO cfs_snapshots VALUES (?,?,?)",
+                (snap["snapshotid"], snap["colonyname"], json.dumps(snap)),
+            )
+            self._conn.executemany(
+                "INSERT OR IGNORE INTO cfs_pins VALUES (?,?,?)",
+                [(snap["colonyname"], fid, snap["snapshotid"]) for fid in snap["fileids"]],
+            )
+            self._conn.commit()
+            return snap
+
+    def cfs_get_snapshot(self, colony: str, snapshotid: str) -> dict | None:
+        with self._lock:
+            row = self._exec(
+                "SELECT body FROM cfs_snapshots WHERE snapshotid=? AND colonyname=?",
+                (snapshotid, colony),
+            ).fetchone()
+            return json.loads(row[0]) if row else None
+
+    def cfs_remove_snapshot(self, colony: str, snapshotid: str) -> dict | None:
+        with self._lock:
+            row = self._exec(
+                "SELECT body FROM cfs_snapshots WHERE snapshotid=? AND colonyname=?",
+                (snapshotid, colony),
+            ).fetchone()
+            if row is None:
+                return None
+            self._exec("DELETE FROM cfs_snapshots WHERE snapshotid=?", (snapshotid,))
+            self._exec(
+                "DELETE FROM cfs_pins WHERE colonyname=? AND snapshotid=?",
+                (colony, snapshotid),
+            )
+            self._conn.commit()
+            return json.loads(row[0])
 
     # kv
     def kv_put(self, table: str, key: str, value: dict) -> None:

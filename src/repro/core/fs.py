@@ -25,11 +25,8 @@ import threading
 from typing import Any, Callable
 
 from .database import Database
-from .errors import AuthError, ConflictError, NotFoundError, ValidationError
+from .errors import ConflictError, NotFoundError, ValidationError
 from .process import now_ns
-
-FILES_TABLE = "cfs_files"
-SNAPSHOTS_TABLE = "cfs_snapshots"
 
 
 def checksum(data: bytes) -> str:
@@ -109,7 +106,13 @@ class LocalStorage(Storage):
 
 
 class CFSExtension:
-    """Registers CFS metadata RPCs on a ColoniesServer."""
+    """Registers CFS metadata RPCs on a ColoniesServer.
+
+    All handlers ride the database's indexed CFS plane (label trees,
+    revision heads, pin refcounts) — no handler lists the file table, so
+    every RPC does work bounded by its own result, not by how many files
+    the deployment has ever stored (mirrors the broker's PR 1 rework).
+    """
 
     def __init__(self, server) -> None:
         self.server = server
@@ -147,7 +150,6 @@ class CFSExtension:
             raise ValidationError("file needs a name")
         if not f.get("checksum"):
             raise ValidationError("file needs a checksum (immutability contract)")
-        prev = self._latest(colony, label, name)
         entry = {
             "fileid": secrets.token_hex(16),
             "colonyname": colony,
@@ -155,37 +157,23 @@ class CFSExtension:
             "name": name,
             "size": int(f.get("size", 0)),
             "checksum": f["checksum"],
-            "revision": (prev["revision"] + 1) if prev else 1,
             "storage": dict(f.get("storage", {})),  # {"backend": scheme, "url": ...}
             "added": now_ns(),
             "addedby": identity,
         }
-        self.db.kv_put(FILES_TABLE, entry["fileid"], entry)
-        return entry
-
-    def _files(self, colony: str) -> list[dict]:
-        return [
-            e for e in self.db.kv_list(FILES_TABLE) if e["colonyname"] == colony
-        ]
-
-    def _latest(self, colony: str, label: str, name: str) -> dict | None:
-        best = None
-        for e in self._files(colony):
-            if e["label"] == label and e["name"] == name:
-                if best is None or e["revision"] > best["revision"]:
-                    best = e
-        return best
+        # The database assigns revision = head + 1 under its own lock.
+        return self.db.cfs_add_file(entry)
 
     def _h_get_file(self, identity: str, payload: dict) -> dict:
         colony = payload["colonyname"]
         self.server._require_member(identity, colony)
         if "fileid" in payload:
-            e = self.db.kv_get(FILES_TABLE, payload["fileid"])
-            if e is None or e["colonyname"] != colony:
+            e = self.db.cfs_get_file(colony, payload["fileid"])
+            if e is None:
                 raise NotFoundError("file not found")
             return e
         label = self._norm_label(payload["label"])
-        e = self._latest(colony, label, payload["name"])
+        e = self.db.cfs_head(colony, label, payload["name"])
         if e is None:
             raise NotFoundError(f"file {label}/{payload['name']} not found")
         return e
@@ -193,63 +181,54 @@ class CFSExtension:
     def _h_get_files(self, identity: str, payload: dict) -> list[dict]:
         colony = payload["colonyname"]
         self.server._require_member(identity, colony)
-        label = self._norm_label(payload["label"])
-        latest: dict[str, dict] = {}
-        for e in self._files(colony):
-            if e["label"] == label or e["label"].startswith(label + "/"):
-                key = e["label"] + "/" + e["name"]
-                if key not in latest or e["revision"] > latest[key]["revision"]:
-                    latest[key] = e
-        return sorted(latest.values(), key=lambda e: (e["label"], e["name"]))
+        return self.db.cfs_list(colony, self._norm_label(payload["label"]))
 
     def _h_remove_file(self, identity: str, payload: dict) -> dict:
         colony = payload["colonyname"]
         self.server._require_member(identity, colony)
         fileid = payload["fileid"]
-        e = self.db.kv_get(FILES_TABLE, fileid)
-        if e is None or e["colonyname"] != colony:
+        # Immutability: a revision pinned by a snapshot cannot be removed —
+        # the database's refcount check raises ConflictError atomically.
+        e = self.db.cfs_remove_file(colony, fileid)
+        if e is None:
             raise NotFoundError("file not found")
-        # Immutability: a revision pinned by a snapshot cannot be removed.
-        for s in self.db.kv_list(SNAPSHOTS_TABLE):
-            if fileid in s.get("fileids", []):
-                raise ConflictError("file revision pinned by snapshot " + s["snapshotid"])
-        self.db.kv_del(FILES_TABLE, fileid)
         return {"fileid": fileid, "removed": True}
 
     def _h_create_snapshot(self, identity: str, payload: dict) -> dict:
         colony = payload["colonyname"]
         self.server._require_member(identity, colony)
-        label = self._norm_label(payload["label"])
-        name = payload.get("name", "")
-        files = self._h_get_files(identity, {"colonyname": colony, "label": label})
         snap = {
             "snapshotid": secrets.token_hex(16),
             "colonyname": colony,
-            "name": name,
-            "label": label,
-            "fileids": [f["fileid"] for f in files],
+            "name": payload.get("name", ""),
+            "label": self._norm_label(payload["label"]),
             "added": now_ns(),
         }
-        self.db.kv_put(SNAPSHOTS_TABLE, snap["snapshotid"], snap)
-        return snap
+        return self.db.cfs_create_snapshot(snap)
 
     def _h_get_snapshot(self, identity: str, payload: dict) -> dict:
         colony = payload["colonyname"]
         self.server._require_member(identity, colony)
-        s = self.db.kv_get(SNAPSHOTS_TABLE, payload["snapshotid"])
-        if s is None or s["colonyname"] != colony:
+        s = self.db.cfs_get_snapshot(colony, payload["snapshotid"])
+        if s is None:
             raise NotFoundError("snapshot not found")
-        s = dict(s)
-        s["files"] = [self.db.kv_get(FILES_TABLE, fid) for fid in s["fileids"]]
+        # A backfilled or hand-edited database may reference revisions that
+        # no longer exist; surface them under "missing" instead of handing
+        # clients None entries that explode in materialize_snapshot.
+        files, missing = [], []
+        for fid, e in zip(s["fileids"], self.db.cfs_get_files_by_ids(colony, s["fileids"])):
+            (files.append(e) if e is not None else missing.append(fid))
+        s["files"] = files
+        if missing:
+            s["missing"] = missing
         return s
 
     def _h_remove_snapshot(self, identity: str, payload: dict) -> dict:
         colony = payload["colonyname"]
         self.server._require_member(identity, colony)
         sid = payload["snapshotid"]
-        if self.db.kv_get(SNAPSHOTS_TABLE, sid) is None:
+        if self.db.cfs_remove_snapshot(colony, sid) is None:
             raise NotFoundError("snapshot not found")
-        self.db.kv_del(SNAPSHOTS_TABLE, sid)
         return {"snapshotid": sid, "removed": True}
 
 

@@ -500,14 +500,23 @@ class ColoniesServer:
         spec = FunctionSpec.from_dict(payload["spec"])
         spec.conditions.colonyname = parent.colonyname
         child = Process.create(spec)
-        child.workflowid = parent.workflowid
         insert_after_parent = bool(payload.get("waitforparent", False))
-        if insert_after_parent:
-            child.parents = [parent_id]
-            child.wait_for_parents = True
-        self.db.add_process(child)
-        parent.children = parent.children + [child.processid]
-        self.db.update_process(parent)
+        # Serialized against close/failsafe on the colony lock, with a
+        # CAS-revalidation like close_process: without it, a close (or
+        # failsafe reset) interleaving between the precheck above and the
+        # children append below would either lose the child edge entirely
+        # or strand a waitforparent child whose parent already succeeded.
+        with self.db.colony_lock(parent.colonyname):
+            parent = self.db.get_process(parent_id)  # re-read under the lock
+            if parent.assignedexecutorid != ex.executorid or parent.state != RUNNING:
+                raise ConflictError("parent closed or reassigned while extending the DAG")
+            child.workflowid = parent.workflowid
+            if insert_after_parent:
+                child.parents = [parent_id]
+                child.wait_for_parents = True
+            self.db.add_process(child)
+            parent.children = parent.children + [child.processid]
+            self.db.update_process(parent)
         if not child.wait_for_parents:
             self._notify_queue([self._queue_key(child)])
         return child.to_dict()

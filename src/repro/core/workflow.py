@@ -39,6 +39,8 @@ def expand_workflow(wf: WorkflowSpec) -> list[Process]:
 def workflow_state(procs: list[Process]) -> str:
     """Aggregate state of a workflow's processes."""
     states = {p.state for p in procs}
+    if not states:  # vacuously complete, not forever "waiting"
+        return "successful"
     if "failed" in states:
         return "failed"
     if states == {"successful"}:

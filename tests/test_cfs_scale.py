@@ -1,0 +1,267 @@
+"""CFS metadata-plane scale regression (mirrors test_broker_scale.py).
+
+The indexed CFS plane must do work bounded by each op's own result —
+never by the total number of files the colony has accumulated — and the
+memory and sqlite backends must agree on every result.
+"""
+
+import pytest
+
+from repro.core import Colonies, Crypto, InProcTransport, MemoryDatabase, SqliteDatabase
+from repro.core.cluster import standalone_server
+from repro.core.errors import ConflictError
+
+BACKENDS = [MemoryDatabase, SqliteDatabase]
+
+
+def _entry(i: int, label: str, name: str) -> dict:
+    return {
+        "fileid": f"f{i:08d}",
+        "colonyname": "scale",
+        "label": label,
+        "name": name,
+        "size": 1,
+        "checksum": f"{i:064x}",
+        "storage": {"backend": "mem", "url": f"mem://{i:064x}"},
+        "added": i,
+        "addedby": "test",
+    }
+
+
+# ---------------------------------------------------------------------------
+# Bounded work per op
+# ---------------------------------------------------------------------------
+
+
+def test_cfs_ops_bounded_at_10k_files():
+    """Hot-subtree ops must not walk the 10k cold files (memdb metrics)."""
+    db = MemoryDatabase()
+    for i in range(10_000):
+        db.cfs_add_file(_entry(i, f"/bulk/s{i % 64:02d}", f"c{i:06d}"))
+    for i in range(20):
+        db.cfs_add_file(_entry(100_000 + i, "/hot", f"h{i:04d}"))
+
+    db.metrics["cfs_nodes_visited"] = 0
+    files = db.cfs_list("scale", "/hot")
+    assert len(files) == 20
+    assert db.metrics["cfs_nodes_visited"] <= 2  # the /hot node, nothing else
+
+    db.metrics["cfs_nodes_visited"] = 0
+    head = db.cfs_head("scale", "/hot", "h0010")
+    assert head is not None and head["revision"] == 1
+    assert db.metrics["cfs_nodes_visited"] == 0  # head index, no tree walk
+
+    snap = db.cfs_create_snapshot(
+        {"snapshotid": "s1", "colonyname": "scale", "name": "s", "label": "/hot"}
+    )
+    assert len(snap["fileids"]) == 20
+
+    # removal pin check is a refcount read, not a snapshot scan
+    assert db.cfs_pin_count("scale", snap["fileids"][0]) == 1
+    with pytest.raises(ConflictError):
+        db.cfs_remove_file("scale", snap["fileids"][0])
+
+
+def test_cfs_root_listing_visits_only_live_labels():
+    """A root listing walks the label tree, not every file revision."""
+    db = MemoryDatabase()
+    for i in range(200):
+        # 50 revisions per (label, name): the walk touches heads only
+        db.cfs_add_file(_entry(i, f"/r/l{i % 4}", "f"))
+    db.metrics["cfs_nodes_visited"] = 0
+    files = db.cfs_list("scale", "/")
+    assert len(files) == 4
+    assert all(f["revision"] == 50 for f in files)
+    assert db.metrics["cfs_nodes_visited"] <= 6  # "/", "/r", 4 leaf labels
+
+
+# ---------------------------------------------------------------------------
+# Backend agreement (contract test through the full RPC surface)
+# ---------------------------------------------------------------------------
+
+
+def _mkserver(db):
+    server_prv, colony_prv = Crypto.prvkey(), Crypto.prvkey()
+    srv = standalone_server(Crypto.id(server_prv), db, verify_signatures=False)
+    client = Colonies(InProcTransport([srv]), insecure=True)
+    client.add_colony("scale", Crypto.id(colony_prv), server_prv)
+    return srv, client, colony_prv
+
+
+def _norm(e: dict) -> tuple:
+    return (e["label"], e["name"], e["revision"], e["checksum"], e["size"])
+
+
+def _drive(db) -> list:
+    """One scripted CFS session; returns a normalized result trace."""
+    srv, client, prv = _mkserver(db)
+    trace: list = []
+    try:
+        def add(label, name, i):
+            return client.add_file(
+                {"colonyname": "scale", "label": label, "name": name, "size": 1,
+                 "checksum": f"{i:064x}",
+                 "storage": {"backend": "mem", "url": f"mem://{i:064x}"}},
+                prv,
+            )
+
+        add("/", "root.txt", 1)
+        add("/a", "x.txt", 2)
+        add("/a", "x.txt", 3)          # second revision
+        add("/a/b", "deep.txt", 4)
+        add("/ab", "sibling.txt", 5)   # shares the '/a' string prefix, not the subtree
+        scratch = add("/scratch", "tmp.txt", 6)
+
+        trace.append([_norm(e) for e in client.get_files("scale", "/", prv)])
+        trace.append([_norm(e) for e in client.get_files("scale", "/a", prv)])
+        trace.append([_norm(e) for e in client.get_files("scale", "/nope", prv)])
+        trace.append(_norm(client.get_file("scale", "/a", "x.txt", prv)))
+
+        snap = client.create_snapshot("scale", "/a", "s1", prv)
+        trace.append(len(snap["fileids"]))
+        got = client.get_snapshot("scale", snap["snapshotid"], prv)
+        trace.append([_norm(e) for e in got["files"]])
+
+        pinned = client.get_file("scale", "/a", "x.txt", prv)
+        try:
+            client.remove_file("scale", pinned["fileid"], prv)
+            trace.append("removed-pinned")
+        except ConflictError:
+            trace.append("pin-conflict")
+
+        client.remove_file("scale", scratch["fileid"], prv)
+        trace.append([_norm(e) for e in client.get_files("scale", "/scratch", prv)])
+
+        client.remove_snapshot("scale", snap["snapshotid"], prv)
+        client.remove_file("scale", pinned["fileid"], prv)
+        # head falls back to the surviving revision 1
+        trace.append(_norm(client.get_file("scale", "/a", "x.txt", prv)))
+        trace.append([_norm(e) for e in client.get_files("scale", "/", prv)])
+    finally:
+        srv.stop()
+    return trace
+
+
+def test_backends_agree_on_cfs_results():
+    mem_trace = _drive(MemoryDatabase())
+    sql_trace = _drive(SqliteDatabase())
+    assert mem_trace == sql_trace
+    # spot-check the scripted expectations themselves
+    assert mem_trace[2] == []                     # unknown label is empty
+    assert mem_trace[3][2] == 2                   # head picked revision 2
+    assert mem_trace[6] == "pin-conflict"
+    assert mem_trace[8][2] == 1                   # fallback head after removal
+
+
+# ---------------------------------------------------------------------------
+# Revision monotonicity + pin lifecycle, on both backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("db_factory", BACKENDS)
+def test_revision_heads_monotonic(db_factory):
+    db = db_factory()
+    revs = [db.cfs_add_file(_entry(i, "/m", "f"))["revision"] for i in range(5)]
+    assert revs == [1, 2, 3, 4, 5]
+    head = db.cfs_head("scale", "/m", "f")
+    db.cfs_remove_file("scale", head["fileid"])
+    assert db.cfs_head("scale", "/m", "f")["revision"] == 4
+    assert db.cfs_add_file(_entry(99, "/m", "f"))["revision"] == 5
+
+
+@pytest.mark.parametrize("db_factory", BACKENDS)
+def test_batched_file_lookup_preserves_order_and_gaps(db_factory):
+    """cfs_get_files_by_ids: one batch (>500 ids exercises sqlite's
+    parameter chunking), results in input order, None where absent."""
+    db = db_factory()
+    ids = [db.cfs_add_file(_entry(i, "/b", f"f{i:04d}"))["fileid"] for i in range(600)]
+    query = [ids[599], "ghost", ids[0], ids[300]]
+    got = db.cfs_get_files_by_ids("scale", query)
+    assert [e["fileid"] if e else None for e in got] == [
+        ids[599], None, ids[0], ids[300],
+    ]
+
+
+@pytest.mark.parametrize("db_factory", BACKENDS)
+def test_pin_refcount_lifecycle(db_factory):
+    db = db_factory()
+    e = db.cfs_add_file(_entry(0, "/p", "f"))
+    s1 = db.cfs_create_snapshot(
+        {"snapshotid": "s1", "colonyname": "scale", "name": "a", "label": "/p"}
+    )
+    s2 = db.cfs_create_snapshot(
+        {"snapshotid": "s2", "colonyname": "scale", "name": "b", "label": "/p"}
+    )
+    assert s1["fileids"] == s2["fileids"] == [e["fileid"]]
+    assert db.cfs_pin_count("scale", e["fileid"]) == 2
+    with pytest.raises(ConflictError):
+        db.cfs_remove_file("scale", e["fileid"])
+    db.cfs_remove_snapshot("scale", "s1")
+    assert db.cfs_pin_count("scale", e["fileid"]) == 1
+    with pytest.raises(ConflictError):
+        db.cfs_remove_file("scale", e["fileid"])
+    db.cfs_remove_snapshot("scale", "s2")
+    assert db.cfs_pin_count("scale", e["fileid"]) == 0
+    assert db.cfs_remove_file("scale", e["fileid"]) is not None
+    assert db.cfs_head("scale", "/p", "f") is None
+
+
+# ---------------------------------------------------------------------------
+# Sqlite migration: seed kv rows -> first-class indexed tables
+# ---------------------------------------------------------------------------
+
+
+def test_sqlite_migration_backfills_from_kv(tmp_path):
+    path = str(tmp_path / "cfs.db")
+    old = SqliteDatabase(path)
+    e = _entry(1, "/mig", "f.txt")
+    e["revision"] = 1
+    old.kv_put("cfs_files", e["fileid"], e)
+    old.kv_put(
+        "cfs_snapshots",
+        "snap1",
+        {"snapshotid": "snap1", "colonyname": "scale", "name": "s",
+         "label": "/mig", "fileids": [e["fileid"], "ghost-fileid"], "added": 0},
+    )
+
+    db = SqliteDatabase(path)  # migration runs on open
+    assert db.cfs_head("scale", "/mig", "f.txt")["fileid"] == e["fileid"]
+    assert [f["name"] for f in db.cfs_list("scale", "/")] == ["f.txt"]
+    # pins rebuilt from the snapshot body: removal is refused
+    assert db.cfs_pin_count("scale", e["fileid"]) == 1
+    with pytest.raises(ConflictError):
+        db.cfs_remove_file("scale", e["fileid"])
+    snap = db.cfs_get_snapshot("scale", "snap1")
+    assert snap["fileids"] == [e["fileid"], "ghost-fileid"]
+    # the kv copies are gone — single source of truth
+    assert old.kv_list("cfs_files") == [] or db.kv_list("cfs_files") == []
+    assert db.kv_list("cfs_snapshots") == []
+
+
+def test_sqlite_migration_resequences_colliding_revisions(tmp_path):
+    """The seed computed revisions without a lock, so two kv rows can both
+    claim (label, name, revision) N; the migration must keep both files,
+    bumping the loser past the head rather than dropping its metadata."""
+    path = str(tmp_path / "collide.db")
+    old = SqliteDatabase(path)
+    for fid in ("aaaa", "bbbb"):
+        e = _entry(1, "/dup", "f.txt")
+        e["fileid"] = fid
+        e["revision"] = 1
+        e["checksum"] = fid * 16
+        old.kv_put("cfs_files", fid, e)
+
+    db = SqliteDatabase(path)
+    files = db.cfs_list("scale", "/dup")
+    assert len(files) == 1  # heads only
+    revs = sorted(
+        r for (r,) in db._exec(
+            "SELECT revision FROM cfs_files WHERE colonyname='scale' AND label='/dup'"
+        ).fetchall()
+    )
+    assert revs == [1, 2]  # both rows survived, re-sequenced
+    assert db.cfs_get_file("scale", "aaaa") is not None
+    assert db.cfs_get_file("scale", "bbbb") is not None
+    # the re-sequenced body agrees with its table row
+    head = db.cfs_head("scale", "/dup", "f.txt")
+    assert head["revision"] == 2

@@ -66,6 +66,62 @@ def test_cron_expression_parser():
         next_cron_deadline_ns("99 * * * *", base)  # out of range
 
 
+def test_cron_range_step_anchors_at_range_start():
+    """11-20/5 is {11, 16} (anchored at 11), not the field-minimum-anchored
+    {15, 20} the seed produced."""
+    from repro.core.cron import _parse_field
+
+    assert _parse_field("11-20/5", 0, 59) == {11, 16}
+    assert _parse_field("*/15", 0, 59) == {0, 15, 30, 45}
+    assert _parse_field("3-10/3,30", 0, 59) == {3, 6, 9, 30}
+    # Vixie: a lone number with a step runs to the field max
+    assert _parse_field("5/15", 0, 59) == {5, 20, 35, 50}
+    assert _parse_field("7", 0, 59) == {7}
+    with pytest.raises(ValidationError):
+        _parse_field("1-5/0", 0, 59)
+
+
+def test_cron_dow_is_sunday_zero():
+    """Standard cron: 0 (and 7) = Sunday. The seed matched Python's
+    tm_wday convention, firing '* * * * 0' on Mondays."""
+    import time
+
+    base = 1_700_000_000 * 10**9
+    nxt = next_cron_deadline_ns("0 0 * * 0", base)
+    st = time.localtime(nxt // 10**9)
+    assert st.tm_wday == 6  # Python weekday 6 == Sunday
+    assert st.tm_hour == 0 and st.tm_min == 0
+    # 7 is accepted as Sunday too
+    assert next_cron_deadline_ns("0 0 * * 7", base) == nxt
+    # Saturday-Sunday range wraps through 7
+    sat_sun = next_cron_deadline_ns("0 0 * * 6-7", base)
+    assert time.localtime(sat_sun // 10**9).tm_wday in (5, 6)
+
+
+def test_cron_dom_dow_or_rule():
+    """Vixie cron: with BOTH day fields restricted, either may match —
+    '0 0 13 * 5' fires every 13th and every Friday, not just Friday-the-13th."""
+    import time
+
+    base = 1_700_000_000 * 10**9
+    t = base
+    fires = []
+    for _ in range(6):
+        t = next_cron_deadline_ns("0 0 13 * 5", t)
+        fires.append(time.localtime(t // 10**9))
+    assert all(st.tm_mday == 13 or st.tm_wday == 4 for st in fires)
+    assert any(st.tm_mday == 13 and st.tm_wday != 4 for st in fires)  # a 13th
+    assert any(st.tm_wday == 4 and st.tm_mday != 13 for st in fires)  # a Friday
+    # with only one day field restricted, it alone decides
+    only_dom = next_cron_deadline_ns("0 0 13 * *", base)
+    assert time.localtime(only_dom // 10**9).tm_mday == 13
+    # a '*/N' day field counts as a star field (Vixie DOM_STAR/DOW_STAR):
+    # the restricted day-of-month ANDs with it instead of OR-ing
+    t = next_cron_deadline_ns("0 0 13 * */2", base)
+    st = time.localtime(t // 10**9)
+    assert st.tm_mday == 13 and (st.tm_wday + 1) % 7 % 2 == 0
+
+
 def test_generator_threshold(colony):
     client, srv = colony["client"], colony["server"]
     gen_ext = srv.extensions[1]

@@ -55,10 +55,7 @@ def test_pinned_revision_cannot_be_removed(colony, cfs):
     meta = cfs.upload_bytes("dev", "/pin", "x.bin", b"x")
     client.create_snapshot("dev", "/pin", "s", colony["colony_prv"])
     with pytest.raises(ConflictError):
-        client._rpc(
-            "removefile", {"colonyname": "dev", "fileid": meta["fileid"]},
-            colony["colony_prv"],
-        )
+        client.remove_file("dev", meta["fileid"], colony["colony_prv"])
 
 
 def test_dir_sync_roundtrip(colony, cfs, tmp_path):
@@ -87,6 +84,48 @@ def test_local_storage_backend(tmp_path):
 def test_missing_file(colony, cfs):
     with pytest.raises(NotFoundError):
         cfs.download_bytes("dev", "/nope", "missing.txt")
+
+
+def test_getfiles_root_label_sees_whole_tree(colony, cfs, tmp_path):
+    """getfiles('/') must list every subdirectory, not just root-level files.
+
+    Seed bug: the prefix test used ``label + "/"`` which is ``"//"`` for
+    the root, so the root listing silently dropped all nested labels (and
+    ``sync_down`` of the root materialized nothing below it).
+    """
+    client = colony["client"]
+    cfs.upload_bytes("dev", "/", "root.txt", b"r")
+    cfs.upload_bytes("dev", "/a", "a.txt", b"a")
+    cfs.upload_bytes("dev", "/a/b", "b.txt", b"b")
+    files = client.get_files("dev", "/", colony["colony_prv"])
+    assert [(f["label"], f["name"]) for f in files] == [
+        ("/", "root.txt"), ("/a", "a.txt"), ("/a/b", "b.txt"),
+    ]
+    dst = tmp_path / "down"
+    cfs.sync_down("dev", "/", str(dst))
+    assert (dst / "root.txt").read_bytes() == b"r"
+    assert (dst / "a" / "a.txt").read_bytes() == b"a"
+    assert (dst / "a" / "b" / "b.txt").read_bytes() == b"b"
+
+
+def test_snapshot_with_tombstoned_file_skips_missing(colony, cfs, tmp_path):
+    """A snapshot referencing a vanished revision (backfilled/inconsistent
+    table) must flag it, not hand clients None entries that TypeError in
+    materialize_snapshot."""
+    client = colony["client"]
+    cfs.upload_bytes("dev", "/tomb", "keep.txt", b"k")
+    gone = cfs.upload_bytes("dev", "/tomb", "gone.txt", b"g")
+    snap = client.create_snapshot("dev", "/tomb", "s", colony["colony_prv"])
+    # drop one revision behind the pin refcounts' back
+    shard = colony["server"].db._cfs("dev")
+    with shard.lock:
+        shard.files.pop(gone["fileid"])
+    got = client.get_snapshot("dev", snap["snapshotid"], colony["colony_prv"])
+    assert [f["name"] for f in got["files"]] == ["keep.txt"]
+    assert got["missing"] == [gone["fileid"]]
+    out = tmp_path / "mat"
+    written = cfs.materialize_snapshot("dev", snap["snapshotid"], str(out))
+    assert [os.path.basename(w) for w in written] == ["keep.txt"]
 
 
 def test_snapshot_listing_and_removal(colony, cfs):

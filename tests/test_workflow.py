@@ -153,6 +153,75 @@ def test_dynamic_children_mapreduce(colony):
     assert sorted(outs) == [0, 10, 20]
 
 
+def test_add_child_close_race_keeps_dag_edge(colony):
+    """A close interleaving inside _h_add_child's check→append window must
+    not strand the child: the handler has to take the colony lock and
+    CAS-revalidate, so the close either waits for the edge or conflicts.
+
+    Deterministic interleave: pause add_child at its first db write (the
+    child insert), let a concurrent close(parent) run, then resume. On
+    the unlocked seed code the close slips into the window, closes the
+    parent without seeing the child, and the waitforparent child is never
+    released."""
+    import threading
+
+    client, srv = colony["client"], colony["server"]
+    ex = ExecutorBase(client, "dev", "race-w", "worker",
+                      colony_prvkey=colony["colony_prv"])
+    parent = client.submit(
+        FunctionSpec.from_dict({
+            "conditions": {"colonyname": "dev", "executortype": "worker"},
+            "funcname": "map", "maxexectime": 300,
+        }),
+        colony["colony_prv"],
+    )
+    assigned = client.assign("dev", 2.0, ex.prvkey)
+    assert assigned["processid"] == parent["processid"]
+
+    db = srv.db
+    real_add = db.add_process
+    in_window, resume = threading.Event(), threading.Event()
+    fired = []
+
+    def paused_add(proc):
+        if not fired and proc.processid != parent["processid"]:
+            fired.append(True)
+            in_window.set()
+            resume.wait(2.0)
+        real_add(proc)
+
+    db.add_process = paused_add
+    try:
+        t_child = threading.Thread(target=client.add_child, args=(
+            parent["processid"],
+            {"conditions": {"executortype": "worker"}, "funcname": "child"},
+            ex.prvkey, True))
+        t_close = threading.Thread(
+            target=lambda: client.close(parent["processid"], [1], ex.prvkey))
+        t_child.start()
+        assert in_window.wait(2.0)
+        t_close.start()
+        t_close.join(0.3)  # on seed code the close completes inside the window
+        resume.set()
+        t_child.join(3.0)
+        t_close.join(3.0)
+    finally:
+        db.add_process = real_add
+
+    p = client.get_process(parent["processid"], colony["colony_prv"])
+    assert p["state"] == "successful" and len(p["children"]) == 1
+    child = client.get_process(p["children"][0], colony["colony_prv"])
+    # the close saw the edge and released the child (lost-edge bug: stays True)
+    assert not child["waitforparents"]
+
+
+def test_workflow_state_empty():
+    """An empty process list is vacuously complete, not forever 'waiting'."""
+    from repro.core.workflow import workflow_state
+
+    assert workflow_state([]) == "successful"
+
+
 def test_workflow_validation():
     with pytest.raises(ValidationError):  # unknown dependency
         WorkflowSpec.from_dict(
