@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 quick suite + the broker and CFS hot-path benchmarks.
+# CI entry point: concurrency lint + tier-1 quick suite + lock-order
+# detector stress run + the broker and CFS hot-path benchmarks.
 #
 #   scripts/verify.sh          # quick suite (skips @slow compile tests)
 #   scripts/verify.sh --full   # everything, including @slow
@@ -7,10 +8,20 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+# Static concurrency/hygiene lint (see CONCURRENCY.md). Exits non-zero on
+# any violation; there is no suppression mechanism.
+python -m repro.analysis.lint
+
 if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -q
 else
     python -m pytest -q -m "not slow"
 fi
+
+# Runtime lock-order detector over the multi-threaded broker tests:
+# every lock acquisition is checked for ordering/leaf/cross-shard
+# violations (recorded violations fail the stress assertion).
+REPRO_LOCK_CHECK=1 python -m pytest -q tests/test_concurrency.py \
+    tests/test_http_and_ha.py tests/test_failsafe.py
 
 python -m benchmarks.run broker cfs

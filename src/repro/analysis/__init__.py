@@ -1,0 +1,35 @@
+"""Concurrency-contract analysis for the ColonyOS broker core.
+
+Three tools, one contract (see CONCURRENCY.md):
+
+* :mod:`repro.analysis.locktrack` — a runtime lock-order detector.
+  ``make_lock(name)`` hands out plain ``threading.RLock`` objects unless
+  ``REPRO_LOCK_CHECK=1`` (or :func:`locktrack.enable`), in which case it
+  returns :class:`TrackedRLock` instances that record per-thread held-lock
+  sets, build the global lock-order graph, and report cycles, acquisition
+  under a leaf lock (``_glock``), cross-shard nesting, and condition-waits
+  entered while holding other locks.
+* :mod:`repro.analysis.contracts` — ``@requires_lock("shard")`` /
+  ``@no_locks_held(...)`` decorators turning the "called with the shard
+  lock held" comments into runtime-checked declarations.
+* :mod:`repro.analysis.lint` — ``python -m repro.analysis.lint``, a
+  stdlib-``ast`` static pass enforcing the repo's concurrency and hygiene
+  rules (shard methods declare contracts, no ``kv_list`` scans outside
+  migrations, no blocking under ``_glock``, no bare ``except``, no
+  mutable default args).
+"""
+
+from .contracts import LockContractError, no_locks_held, requires_lock
+from .locktrack import TrackedRLock, enable, is_enabled, make_lock, reset, violations
+
+__all__ = [
+    "LockContractError",
+    "TrackedRLock",
+    "enable",
+    "is_enabled",
+    "make_lock",
+    "no_locks_held",
+    "requires_lock",
+    "reset",
+    "violations",
+]

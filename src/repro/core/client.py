@@ -253,6 +253,9 @@ class Colonies:
             "getsnapshot", {"colonyname": colonyname, "snapshotid": snapshotid}, prvkey
         )
 
+    def get_snapshots(self, colonyname: str, prvkey: str) -> list[dict]:
+        return self._rpc("getsnapshots", {"colonyname": colonyname}, prvkey)
+
     def remove_snapshot(self, colonyname: str, snapshotid: str, prvkey: str) -> dict:
         return self._rpc(
             "removesnapshot",

@@ -12,9 +12,9 @@ Cron/generator scanning and the failsafe run on the leader only.
 
 from __future__ import annotations
 
-import threading
 from collections import deque
 
+from ..analysis.locktrack import make_lock
 from .cron import CronExtension
 from .database import Database, MemoryDatabase
 from .errors import ConflictError
@@ -39,7 +39,7 @@ class HAColonyCluster:
         # serialization point for assign/close/failsafe across ALL replicas.
         self.db = db if db is not None else MemoryDatabase()
         self.servers: list[ColoniesServer] = []
-        self._applied_lock = threading.Lock()
+        self._applied_lock = make_lock("applied")
         # Bounded replay-dedup window; apply_assign's WAITING CAS is the
         # authoritative idempotence guard for anything older.
         self._applied_ops: set[str] = set()

@@ -24,8 +24,6 @@ from .errors import NotFoundError, ValidationError
 from .process import now_ns
 from .spec import WorkflowSpec
 
-CRON_TABLE = "crons"
-
 
 # ---------------------------------------------------------------------------
 # Tiny 5-field cron expression parser
@@ -150,8 +148,9 @@ class CronExtension:
             "lastrun": 0,
             "runs": 0,
             "lastworkflowid": "",
+            "added": ts,
         }
-        self.db.kv_put(CRON_TABLE, entry["cronid"], entry)
+        self.db.cron_put(entry)
         return entry
 
     @staticmethod
@@ -163,21 +162,21 @@ class CronExtension:
     def _h_get_crons(self, identity: str, payload: dict) -> list[dict]:
         colony = payload["colonyname"]
         self.server._require_member(identity, colony)
-        return [e for e in self.db.kv_list(CRON_TABLE) if e["colonyname"] == colony]
+        return self.db.cron_list(colony)
 
     def _h_remove_cron(self, identity: str, payload: dict) -> dict:
         cronid = payload["cronid"]
-        entry = self.db.kv_get(CRON_TABLE, cronid)
+        entry = self.db.cron_get(cronid)
         if entry is None:
             raise NotFoundError("cron not found")
         self.server._require_member(identity, entry["colonyname"])
-        self.db.kv_del(CRON_TABLE, cronid)
+        self.db.cron_del(cronid)
         return {"cronid": cronid, "removed": True}
 
     def _h_run_cron(self, identity: str, payload: dict) -> dict:
         """Force-fire a cron now (CLI convenience)."""
         cronid = payload["cronid"]
-        entry = self.db.kv_get(CRON_TABLE, cronid)
+        entry = self.db.cron_get(cronid)
         if entry is None:
             raise NotFoundError("cron not found")
         self.server._require_member(identity, entry["colonyname"])
@@ -185,13 +184,17 @@ class CronExtension:
 
     # -- leader scan (step 2) -------------------------------------------------
     def tick(self) -> int:
-        """Scan the cron table; fire everything past deadline. Leader-only."""
+        """Fire everything past deadline via the deadline index. Leader-only.
+
+        ``cron_due`` reads the database's deadline index (a heap in memdb,
+        a B-tree range scan in sqlite), so the 250 ms leader tick does
+        O(due) work instead of scanning every colony's crons.
+        """
         ts = now_ns()
         fired = 0
-        for entry in self.db.kv_list(CRON_TABLE):
-            if ts > entry["deadline"]:
-                self._fire(entry, ts)
-                fired += 1
+        for entry in self.db.cron_due(ts):
+            self._fire(entry, ts)
+            fired += 1
         return fired
 
     def _fire(self, entry: dict, ts: int) -> dict:
@@ -202,7 +205,7 @@ class CronExtension:
         entry["lastrun"] = ts
         entry["runs"] = entry.get("runs", 0) + 1
         entry["lastworkflowid"] = procs[0].workflowid
-        self.db.kv_put(CRON_TABLE, entry["cronid"], entry)
+        self.db.cron_put(entry)
         self.server._notify_queue()
         self.triggered += 1
         return entry

@@ -48,6 +48,8 @@ import sqlite3
 import threading
 from typing import Any, Iterable
 
+from ..analysis.contracts import requires_lock
+from ..analysis.locktrack import make_lock
 from .errors import ConflictError, NotFoundError
 from .process import (
     FAILED,
@@ -179,8 +181,50 @@ class Database:
     def cfs_get_snapshot(self, colony: str, snapshotid: str) -> dict | None:
         raise NotImplementedError
 
+    def cfs_list_snapshots(self, colony: str) -> list[dict]:
+        """All snapshots of one colony, oldest first (indexed per colony)."""
+        raise NotImplementedError
+
     def cfs_remove_snapshot(self, colony: str, snapshotid: str) -> dict | None:
         """Remove a snapshot and release its pins; None if absent."""
+        raise NotImplementedError
+
+    # -- cron / generator tables (cron.py, generator.py) --------------------
+    # First-class per-colony indexed tables: listings never scan other
+    # colonies' entries, and the cron leader tick reads a deadline index
+    # instead of the whole table (the kv buckets the seed used survive
+    # only as a sqlite migration source).
+    def cron_put(self, entry: dict) -> None:
+        """Insert or update a cron entry (keyed by ``entry['cronid']``)."""
+        raise NotImplementedError
+
+    def cron_get(self, cronid: str) -> dict | None:
+        raise NotImplementedError
+
+    def cron_del(self, cronid: str) -> None:
+        raise NotImplementedError
+
+    def cron_list(self, colony: str) -> list[dict]:
+        raise NotImplementedError
+
+    def cron_due(self, ts: int) -> list[dict]:
+        """Entries with ``deadline < ts`` via the deadline index, O(due)."""
+        raise NotImplementedError
+
+    def generator_put(self, entry: dict) -> None:
+        raise NotImplementedError
+
+    def generator_get(self, generatorid: str) -> dict | None:
+        raise NotImplementedError
+
+    def generator_del(self, generatorid: str) -> None:
+        raise NotImplementedError
+
+    def generator_list(self, colony: str) -> list[dict]:
+        raise NotImplementedError
+
+    def generator_all(self) -> list[dict]:
+        """Every generator (leader tick); first-class table iteration."""
         raise NotImplementedError
 
     # -- key/value side tables (cron, generators, CFS metadata) -------------
@@ -234,8 +278,8 @@ class _ColonyShard:
         "wait_pushed",
     )
 
-    def __init__(self) -> None:
-        self.lock = threading.RLock()
+    def __init__(self, colony: str = "") -> None:
+        self.lock = make_lock(f"shard:{colony}")
         self.procs: dict[str, Process] = {}
         # executortype -> sorted [(priority_time, pid)] of ready untargeted procs
         self.queues: dict[str, list[tuple[int, str]]] = {}
@@ -263,8 +307,8 @@ class _CfsShard:
 
     __slots__ = ("lock", "files", "by_label", "children", "snapshots", "pins")
 
-    def __init__(self) -> None:
-        self.lock = threading.RLock()
+    def __init__(self, colony: str = "") -> None:
+        self.lock = make_lock(f"cfs:{colony}")
         self.files: dict[str, dict] = {}
         self.by_label: dict[str, dict[str, list[tuple[int, str]]]] = {}
         self.children: dict[str, set[str]] = {}
@@ -278,7 +322,9 @@ def _cfs_parent(label: str) -> str:
 
 class MemoryDatabase(Database):
     def __init__(self) -> None:
-        self._glock = threading.RLock()  # registries + shard map only
+        # Registries + shard map only; a LEAF lock (see CONCURRENCY.md):
+        # nothing may be acquired and nothing may block while holding it.
+        self._glock = make_lock("glock")
         self._colonies: dict[str, Colony] = {}
         self._executors: dict[str, Executor] = {}
         self._functions: list[dict] = []
@@ -287,6 +333,13 @@ class MemoryDatabase(Database):
         self._pid_colony: dict[str, str] = {}
         self._kv: dict[str, dict[str, dict]] = {}
         self._kvlists: dict[str, dict[str, list[dict]]] = {}
+        # Cron/generator tables: colony -> id -> entry, with reverse maps
+        # for id-keyed lookups and a lazily-invalidated cron deadline heap.
+        self._crons: dict[str, dict[str, dict]] = {}
+        self._cron_colony: dict[str, str] = {}
+        self._cron_heap: list[tuple[int, str]] = []
+        self._generators: dict[str, dict[str, dict]] = {}
+        self._generator_colony: dict[str, str] = {}
         # Observability for bounded-work regression tests/benchmarks.
         self.metrics: dict[str, int] = {
             "deadline_pops": 0,
@@ -300,14 +353,14 @@ class MemoryDatabase(Database):
         with self._glock:
             s = self._shards.get(colony)
             if s is None:
-                s = self._shards[colony] = _ColonyShard()
+                s = self._shards[colony] = _ColonyShard(colony)
             return s
 
     def _cfs(self, colony: str) -> _CfsShard:
         with self._glock:
             s = self._cfs_shards.get(colony)
             if s is None:
-                s = self._cfs_shards[colony] = _CfsShard()
+                s = self._cfs_shards[colony] = _CfsShard(colony)
             return s
 
     def colony_lock(self, colony: str) -> threading.RLock:
@@ -394,7 +447,9 @@ class MemoryDatabase(Database):
                 and (executorid is None or f["executorid"] == executorid)
             ]
 
-    # -- process bookkeeping (all called with the shard lock held) -----------
+    # -- process bookkeeping (contract: shard lock held, checked under
+    # REPRO_LOCK_CHECK — see repro.analysis.contracts) ------------------------
+    @requires_lock("shard")
     def _account(self, s: _ColonyShard, p: Process) -> None:
         old = s.acct.get(p.processid)
         if old == p.state:
@@ -406,6 +461,7 @@ class MemoryDatabase(Database):
         s.counters[p.state] = s.counters.get(p.state, 0) + 1
         s.acct[p.processid] = p.state
 
+    @requires_lock("shard")
     def _note_stale(self, s: _ColonyShard, p: Process) -> None:
         etype = p.spec.conditions.executortype
         # One unit per queue entry the process held: a multi-target process
@@ -414,6 +470,7 @@ class MemoryDatabase(Database):
         s.stale[etype] = s.stale.get(etype, 0) + entries
         self._maybe_compact(s, etype)
 
+    @requires_lock("shard")
     def _maybe_compact(self, s: _ColonyShard, etype: str) -> None:
         n_stale = s.stale.get(etype, 0)
         q = s.queues.get(etype, [])
@@ -438,6 +495,7 @@ class MemoryDatabase(Database):
         self.metrics["compactions"] += 1
         self.metrics["stale_evicted"] += before - after
 
+    @requires_lock("shard")
     def _push_deadlines(self, s: _ColonyShard, p: Process) -> None:
         pid = p.processid
         if p.state == RUNNING and p.deadline_ns:
@@ -449,6 +507,7 @@ class MemoryDatabase(Database):
                 heapq.heappush(s.wait_heap, (p.waitdeadline_ns, pid))
                 s.wait_pushed[pid] = p.waitdeadline_ns
 
+    @requires_lock("shard")
     def _enqueue(self, s: _ColonyShard, p: Process) -> None:
         # Blocked processes are side-lined entirely; they re-enter the ready
         # queues through requeue() when their last parent succeeds.
@@ -510,6 +569,7 @@ class MemoryDatabase(Database):
             self._push_deadlines(s, p)
             self._enqueue(s, p)
 
+    @requires_lock("shard")
     def _scan_queue(
         self,
         s: _ColonyShard,
@@ -601,6 +661,7 @@ class MemoryDatabase(Database):
             out.sort(key=lambda p: p.priority_time)
             return out[:count]
 
+    @requires_lock("shard")
     def _pop_expired(
         self,
         s: _ColonyShard,
@@ -676,6 +737,7 @@ class MemoryDatabase(Database):
 
     # -- CFS metadata -------------------------------------------------------
     @staticmethod
+    @requires_lock("cfs")
     def _cfs_link(s: _CfsShard, label: str) -> None:
         """Wire a new label into the tree, up to the first existing edge."""
         while label != "/":
@@ -687,6 +749,7 @@ class MemoryDatabase(Database):
             label = parent
 
     @staticmethod
+    @requires_lock("cfs")
     def _cfs_prune(s: _CfsShard, label: str) -> None:
         """Drop now-empty labels so the tree only holds live paths."""
         while label != "/" and not s.by_label.get(label) and not s.children.get(label):
@@ -737,6 +800,7 @@ class MemoryDatabase(Database):
         with s.lock:
             return self._cfs_list_locked(s, label)
 
+    @requires_lock("cfs")
     def _cfs_list_locked(self, s: _CfsShard, label: str) -> list[dict]:
         if label not in s.by_label and label not in s.children:
             return []
@@ -799,6 +863,13 @@ class MemoryDatabase(Database):
             snap = s.snapshots.get(snapshotid)
             return dict(snap) if snap is not None else None
 
+    def cfs_list_snapshots(self, colony: str) -> list[dict]:
+        s = self._cfs(colony)
+        with s.lock:
+            snaps = [dict(v) for v in s.snapshots.values()]
+        snaps.sort(key=lambda e: (e.get("added", 0), e["snapshotid"]))
+        return snaps
+
     def cfs_remove_snapshot(self, colony: str, snapshotid: str) -> dict | None:
         s = self._cfs(colony)
         with s.lock:
@@ -845,6 +916,95 @@ class MemoryDatabase(Database):
     def kv_len(self, table: str, key: str) -> int:
         with self._glock:
             return len(self._kvlists.get(table, {}).get(key, []))
+
+    # cron / generator tables
+    def cron_put(self, entry: dict) -> None:
+        with self._glock:
+            colony = entry["colonyname"]
+            self._crons.setdefault(colony, {})[entry["cronid"]] = dict(entry)
+            self._cron_colony[entry["cronid"]] = colony
+            heapq.heappush(
+                self._cron_heap, (entry.get("deadline", 0), entry["cronid"])
+            )
+
+    def cron_get(self, cronid: str) -> dict | None:
+        with self._glock:
+            colony = self._cron_colony.get(cronid)
+            if colony is None:
+                return None
+            e = self._crons.get(colony, {}).get(cronid)
+            return dict(e) if e is not None else None
+
+    def cron_del(self, cronid: str) -> None:
+        with self._glock:
+            colony = self._cron_colony.pop(cronid, None)
+            if colony is not None:
+                self._crons.get(colony, {}).pop(cronid, None)
+                # Heap entries go stale and are dropped lazily by cron_due.
+
+    def cron_list(self, colony: str) -> list[dict]:
+        with self._glock:
+            entries = [dict(e) for e in self._crons.get(colony, {}).values()]
+        entries.sort(key=lambda e: (e.get("added", 0), e["cronid"]))
+        return entries
+
+    def cron_due(self, ts: int) -> list[dict]:
+        """Due entries via the deadline heap, dropping stale ones lazily.
+
+        Still-live due entries are pushed back with their unchanged
+        deadline: the caller fires and reschedules via cron_put (a new
+        heap entry supersedes the pushed-back one), so a leader crash
+        between due() and fire loses nothing — the next scan sees the
+        entry again, exactly like sqlite's read-only range scan.
+        """
+        due: list[dict] = []
+        keep: list[tuple[int, str]] = []
+        with self._glock:
+            while self._cron_heap and self._cron_heap[0][0] < ts:
+                deadline, cronid = heapq.heappop(self._cron_heap)
+                colony = self._cron_colony.get(cronid)
+                e = self._crons.get(colony, {}).get(cronid) if colony else None
+                if e is None or e.get("deadline", 0) != deadline:
+                    continue  # removed or rescheduled: stale heap entry
+                due.append(dict(e))
+                keep.append((deadline, cronid))
+            for item in keep:
+                heapq.heappush(self._cron_heap, item)
+        return due
+
+    def generator_put(self, entry: dict) -> None:
+        with self._glock:
+            colony = entry["colonyname"]
+            self._generators.setdefault(colony, {})[entry["generatorid"]] = dict(entry)
+            self._generator_colony[entry["generatorid"]] = colony
+
+    def generator_get(self, generatorid: str) -> dict | None:
+        with self._glock:
+            colony = self._generator_colony.get(generatorid)
+            if colony is None:
+                return None
+            e = self._generators.get(colony, {}).get(generatorid)
+            return dict(e) if e is not None else None
+
+    def generator_del(self, generatorid: str) -> None:
+        with self._glock:
+            colony = self._generator_colony.pop(generatorid, None)
+            if colony is not None:
+                self._generators.get(colony, {}).pop(generatorid, None)
+
+    def generator_list(self, colony: str) -> list[dict]:
+        with self._glock:
+            entries = [dict(e) for e in self._generators.get(colony, {}).values()]
+        entries.sort(key=lambda e: (e.get("added", 0), e["generatorid"]))
+        return entries
+
+    def generator_all(self) -> list[dict]:
+        with self._glock:
+            return [
+                dict(e)
+                for per_colony in self._generators.values()
+                for e in per_colony.values()
+            ]
 
 
 # ---------------------------------------------------------------------------
@@ -897,6 +1057,17 @@ CREATE UNIQUE INDEX IF NOT EXISTS idx_cfs_head
 CREATE TABLE IF NOT EXISTS cfs_snapshots (
     snapshotid TEXT PRIMARY KEY, colonyname TEXT NOT NULL, body TEXT NOT NULL
 );
+CREATE INDEX IF NOT EXISTS idx_cfs_snap_colony ON cfs_snapshots (colonyname);
+CREATE TABLE IF NOT EXISTS crons (
+    cronid TEXT PRIMARY KEY, colonyname TEXT NOT NULL,
+    deadline INTEGER NOT NULL DEFAULT 0, body TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_crons_colony ON crons (colonyname);
+CREATE INDEX IF NOT EXISTS idx_crons_deadline ON crons (deadline);
+CREATE TABLE IF NOT EXISTS generators (
+    generatorid TEXT PRIMARY KEY, colonyname TEXT NOT NULL, body TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_generators_colony ON generators (colonyname);
 CREATE TABLE IF NOT EXISTS cfs_pins (
     colonyname TEXT NOT NULL, fileid TEXT NOT NULL, snapshotid TEXT NOT NULL,
     PRIMARY KEY (colonyname, fileid, snapshotid)
@@ -930,15 +1101,17 @@ class SqliteDatabase(Database):
     """
 
     def __init__(self, path: str = ":memory:") -> None:
-        self._lock = threading.RLock()
+        self._lock = make_lock("sqlite")
         self._colony_locks: dict[str, threading.RLock] = {}
         self._conn = sqlite3.connect(path, check_same_thread=False)
-        self._conn.execute("PRAGMA journal_mode=WAL")
-        self._migrate()
-        self._conn.executescript(_SCHEMA)
-        self._rebuild_counts_if_missing()
-        self._migrate_cfs()
-        self._conn.commit()
+        with self._lock:
+            self._conn.execute("PRAGMA journal_mode=WAL")
+            self._migrate()
+            self._conn.executescript(_SCHEMA)
+            self._rebuild_counts_if_missing()
+            self._migrate_cfs()
+            self._migrate_cron_gen()
+            self._conn.commit()
 
     def _migrate(self) -> None:
         """Add columns introduced after a db file was created."""
@@ -1034,6 +1207,37 @@ class SqliteDatabase(Database):
                 )
         self._conn.execute("DELETE FROM kv WHERE tbl IN ('cfs_files','cfs_snapshots')")
 
+    def _migrate_cron_gen(self) -> None:
+        """Backfill first-class cron/generator tables from the seed's kv rows.
+
+        Same pattern as :meth:`_migrate_cfs`: pre-index databases stored
+        cron and generator entries as opaque JSON under kv(tbl='crons') /
+        kv(tbl='generators'); lift them into the indexed tables and drop
+        the kv copies.
+        """
+        for (val,) in self._conn.execute(
+            "SELECT value FROM kv WHERE tbl='crons'"
+        ).fetchall():
+            e = json.loads(val)
+            self._conn.execute(
+                "INSERT OR IGNORE INTO crons VALUES (?,?,?,?)",
+                (
+                    e["cronid"],
+                    e["colonyname"],
+                    int(e.get("deadline", 0)),
+                    json.dumps(e),
+                ),
+            )
+        for (val,) in self._conn.execute(
+            "SELECT value FROM kv WHERE tbl='generators'"
+        ).fetchall():
+            e = json.loads(val)
+            self._conn.execute(
+                "INSERT OR IGNORE INTO generators VALUES (?,?,?)",
+                (e["generatorid"], e["colonyname"], json.dumps(e)),
+            )
+        self._conn.execute("DELETE FROM kv WHERE tbl IN ('crons','generators')")
+
     def _rebuild_counts_if_missing(self) -> None:
         have = self._conn.execute("SELECT COUNT(*) FROM proc_counts").fetchone()[0]
         procs = self._conn.execute("SELECT COUNT(*) FROM processes").fetchone()[0]
@@ -1044,6 +1248,7 @@ class SqliteDatabase(Database):
                 " GROUP BY colonyname, state"
             )
 
+    @requires_lock("sqlite")
     def _exec(self, sql: str, args: Iterable[Any] = ()) -> sqlite3.Cursor:
         return self._conn.execute(sql, tuple(args))
 
@@ -1051,7 +1256,7 @@ class SqliteDatabase(Database):
         with self._lock:
             lk = self._colony_locks.get(colony)
             if lk is None:
-                lk = self._colony_locks[colony] = threading.RLock()
+                lk = self._colony_locks[colony] = make_lock(f"dbcolony:{colony}")
             return lk
 
     # colonies
@@ -1190,6 +1395,7 @@ class SqliteDatabase(Database):
             ]
 
     # processes
+    @requires_lock("sqlite")
     def _bump_count(self, colony: str, state: str, delta: int) -> None:
         self._exec(
             "INSERT INTO proc_counts VALUES (?,?,?)"
@@ -1197,6 +1403,7 @@ class SqliteDatabase(Database):
             (colony, state, delta),
         )
 
+    @requires_lock("sqlite")
     def _write_process(self, p: Process, insert: bool) -> None:
         body = p.to_json()
         if insert:
@@ -1393,6 +1600,7 @@ class SqliteDatabase(Database):
             ).fetchone()
             return json.loads(row[0]) if row else None
 
+    @requires_lock("sqlite")
     def _cfs_list_locked(self, colony: str, label: str) -> list[dict]:
         # Two range probes of idx_cfs_head (an OR'd predicate makes sqlite
         # fall back to scanning the whole colony prefix): the label itself,
@@ -1477,6 +1685,15 @@ class SqliteDatabase(Database):
             ).fetchone()
             return json.loads(row[0]) if row else None
 
+    def cfs_list_snapshots(self, colony: str) -> list[dict]:
+        with self._lock:
+            rows = self._exec(
+                "SELECT body FROM cfs_snapshots WHERE colonyname=?", (colony,)
+            ).fetchall()
+        snaps = [json.loads(r[0]) for r in rows]
+        snaps.sort(key=lambda e: (e.get("added", 0), e["snapshotid"]))
+        return snaps
+
     def cfs_remove_snapshot(self, colony: str, snapshotid: str) -> dict | None:
         with self._lock:
             row = self._exec(
@@ -1551,3 +1768,82 @@ class SqliteDatabase(Database):
             return self._exec(
                 "SELECT COUNT(*) FROM kvlist WHERE tbl=? AND key=?", (table, key)
             ).fetchone()[0]
+
+    # cron / generator tables
+    def cron_put(self, entry: dict) -> None:
+        with self._lock:
+            self._exec(
+                "INSERT INTO crons VALUES (?,?,?,?) ON CONFLICT(cronid)"
+                " DO UPDATE SET deadline=excluded.deadline, body=excluded.body",
+                (
+                    entry["cronid"],
+                    entry["colonyname"],
+                    int(entry.get("deadline", 0)),
+                    json.dumps(entry),
+                ),
+            )
+            self._conn.commit()
+
+    def cron_get(self, cronid: str) -> dict | None:
+        with self._lock:
+            row = self._exec(
+                "SELECT body FROM crons WHERE cronid=?", (cronid,)
+            ).fetchone()
+            return json.loads(row[0]) if row else None
+
+    def cron_del(self, cronid: str) -> None:
+        with self._lock:
+            self._exec("DELETE FROM crons WHERE cronid=?", (cronid,))
+            self._conn.commit()
+
+    def cron_list(self, colony: str) -> list[dict]:
+        with self._lock:
+            rows = self._exec(
+                "SELECT body FROM crons WHERE colonyname=?", (colony,)
+            ).fetchall()
+        entries = [json.loads(r[0]) for r in rows]
+        entries.sort(key=lambda e: (e.get("added", 0), e["cronid"]))
+        return entries
+
+    def cron_due(self, ts: int) -> list[dict]:
+        with self._lock:
+            # Range scan on idx_crons_deadline: O(due), not O(crons).
+            rows = self._exec(
+                "SELECT body FROM crons WHERE deadline<? ORDER BY deadline", (ts,)
+            ).fetchall()
+        return [json.loads(r[0]) for r in rows]
+
+    def generator_put(self, entry: dict) -> None:
+        with self._lock:
+            self._exec(
+                "INSERT INTO generators VALUES (?,?,?) ON CONFLICT(generatorid)"
+                " DO UPDATE SET body=excluded.body",
+                (entry["generatorid"], entry["colonyname"], json.dumps(entry)),
+            )
+            self._conn.commit()
+
+    def generator_get(self, generatorid: str) -> dict | None:
+        with self._lock:
+            row = self._exec(
+                "SELECT body FROM generators WHERE generatorid=?", (generatorid,)
+            ).fetchone()
+            return json.loads(row[0]) if row else None
+
+    def generator_del(self, generatorid: str) -> None:
+        with self._lock:
+            self._exec("DELETE FROM generators WHERE generatorid=?", (generatorid,))
+            self._conn.commit()
+
+    def generator_list(self, colony: str) -> list[dict]:
+        with self._lock:
+            rows = self._exec(
+                "SELECT body FROM generators WHERE colonyname=?", (colony,)
+            ).fetchall()
+        entries = [json.loads(r[0]) for r in rows]
+        entries.sort(key=lambda e: (e.get("added", 0), e["generatorid"]))
+        return entries
+
+    def generator_all(self) -> list[dict]:
+        with self._lock:
+            rows = self._exec("SELECT body FROM generators").fetchall()
+            return [json.loads(r[0]) for r in rows]

@@ -21,9 +21,9 @@ from __future__ import annotations
 import hashlib
 import os
 import secrets
-import threading
 from typing import Any, Callable
 
+from ..analysis.locktrack import make_lock
 from .database import Database
 from .errors import ConflictError, NotFoundError, ValidationError
 from .process import now_ns
@@ -56,7 +56,7 @@ class MemoryStorage(Storage):
 
     def __init__(self) -> None:
         self._blobs: dict[str, bytes] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("storage")
 
     def put(self, data: bytes) -> str:
         key = checksum(data)
@@ -127,6 +127,7 @@ class CFSExtension:
             "removefile": self._h_remove_file,
             "createsnapshot": self._h_create_snapshot,
             "getsnapshot": self._h_get_snapshot,
+            "getsnapshots": self._h_get_snapshots,
             "removesnapshot": self._h_remove_snapshot,
         }
 
@@ -222,6 +223,11 @@ class CFSExtension:
         if missing:
             s["missing"] = missing
         return s
+
+    def _h_get_snapshots(self, identity: str, payload: dict) -> list[dict]:
+        colony = payload["colonyname"]
+        self.server._require_member(identity, colony)
+        return self.db.cfs_list_snapshots(colony)
 
     def _h_remove_snapshot(self, identity: str, payload: dict) -> dict:
         colony = payload["colonyname"]

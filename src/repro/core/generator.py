@@ -23,7 +23,6 @@ from .errors import NotFoundError, ValidationError
 from .process import now_ns
 from .spec import WorkflowSpec
 
-GENERATORS_TABLE = "generators"
 PACKS_TABLE = "generator_packs"
 
 
@@ -65,35 +64,34 @@ class GeneratorExtension:
             "timeout": float(g.get("timeout", 0)),  # seconds; 0 = only threshold
             "firstpack": 0,
             "runs": 0,
+            "added": now_ns(),
         }
-        self.db.kv_put(GENERATORS_TABLE, entry["generatorid"], entry)
+        self.db.generator_put(entry)
         return entry
 
     def _h_get_generators(self, identity: str, payload: dict) -> list[dict]:
         colony = payload["colonyname"]
         self.server._require_member(identity, colony)
         out = []
-        for e in self.db.kv_list(GENERATORS_TABLE):
-            if e["colonyname"] == colony:
-                e = dict(e)
-                e["pending"] = self.db.kv_len(PACKS_TABLE, e["generatorid"])
-                out.append(e)
+        for e in self.db.generator_list(colony):
+            e["pending"] = self.db.kv_len(PACKS_TABLE, e["generatorid"])
+            out.append(e)
         return out
 
     def _h_remove_generator(self, identity: str, payload: dict) -> dict:
         gid = payload["generatorid"]
-        entry = self.db.kv_get(GENERATORS_TABLE, gid)
+        entry = self.db.generator_get(gid)
         if entry is None:
             raise NotFoundError("generator not found")
         self.server._require_member(identity, entry["colonyname"])
-        self.db.kv_del(GENERATORS_TABLE, gid)
+        self.db.generator_del(gid)
         self.db.kv_take_all(PACKS_TABLE, gid)
         return {"generatorid": gid, "removed": True}
 
     def _h_pack(self, identity: str, payload: dict) -> dict:
         """Append-only: safe on any replica without synchronization (§3.4.4)."""
         gid = payload["generatorid"]
-        entry = self.db.kv_get(GENERATORS_TABLE, gid)
+        entry = self.db.generator_get(gid)
         if entry is None:
             raise NotFoundError("generator not found")
         self.server._require_member(identity, entry["colonyname"])
@@ -101,16 +99,15 @@ class GeneratorExtension:
             PACKS_TABLE, gid, {"arg": payload.get("arg"), "ts": now_ns()}
         )
         if entry.get("firstpack", 0) == 0:
-            entry = dict(entry)
             entry["firstpack"] = now_ns()
-            self.db.kv_put(GENERATORS_TABLE, gid, entry)
+            self.db.generator_put(entry)
         return {"generatorid": gid, "pending": n}
 
     # -- leader scan --------------------------------------------------------
     def tick(self) -> int:
         ts = now_ns()
         fired = 0
-        for entry in self.db.kv_list(GENERATORS_TABLE):
+        for entry in self.db.generator_all():
             gid = entry["generatorid"]
             pending = self.db.kv_len(PACKS_TABLE, gid)
             if pending == 0:
@@ -141,6 +138,6 @@ class GeneratorExtension:
         entry = dict(entry)
         entry["firstpack"] = 0
         entry["runs"] = entry.get("runs", 0) + 1
-        self.db.kv_put(GENERATORS_TABLE, gid, entry)
+        self.db.generator_put(entry)
         self.server._notify_queue()
         self.triggered += 1

@@ -21,6 +21,9 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from ..analysis.contracts import no_locks_held
+from ..analysis.locktrack import make_lock
+
 FOLLOWER = "follower"
 CANDIDATE = "candidate"
 LEADER = "leader"
@@ -79,7 +82,7 @@ class RaftNode:
         self._last_heartbeat_ms = 0
         self._timeout_ms = self._new_timeout()
         self._peer_contact_ms: dict[str, int] = {}
-        self.lock = threading.RLock()
+        self.lock = make_lock(f"raft:{node_id}")
 
     # ------------------------------------------------------------------ util
     def _new_timeout(self) -> int:
@@ -448,7 +451,7 @@ class ThreadedRaftCluster:
         self.tick_ms = tick_ms
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
-        self._lock = threading.Lock()
+        self._lock = make_lock("cluster")
 
     @property
     def nodes(self) -> dict[str, RaftNode]:
@@ -468,8 +471,15 @@ class ThreadedRaftCluster:
         if self._thread is not None:
             self._thread.join(timeout=2)
 
+    @no_locks_held("shard", "cfs", "glock", "dbcolony", "sqlite")
     def propose_and_wait(self, nid: str, entry: dict, timeout: float = 5.0) -> int:
-        """Propose on node nid; block until that node has applied the entry."""
+        """Propose on node nid; block until that node has applied the entry.
+
+        Contract: never entered holding a database lock — the commit is
+        applied on the event-loop thread, which needs those same locks
+        (the PR-1 deadlock). The leader-local ``assignlocal`` lock is the
+        one lock legitimately held across this wait.
+        """
         import time as _time
 
         node = self.nodes[nid]

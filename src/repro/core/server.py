@@ -33,6 +33,8 @@ from __future__ import annotations
 import threading
 from typing import Any, Callable
 
+from ..analysis.contracts import no_locks_held
+from ..analysis.locktrack import make_lock
 from .database import Database, MemoryDatabase
 from .errors import (
     AuthError,
@@ -65,8 +67,8 @@ class _QueueSignal:
 
     __slots__ = ("cv", "version")
 
-    def __init__(self) -> None:
-        self.cv = threading.Condition()
+    def __init__(self, key: tuple[str, str] = ("", "")) -> None:
+        self.cv = threading.Condition(make_lock(f"queuecv:{key[0]}:{key[1]}"))
         self.version = 0
 
 
@@ -96,7 +98,7 @@ class ColoniesServer:
         self.verify_signatures = verify_signatures
         # Per-(colony, executortype) wakeup channels for long-poll assign.
         self._signals: dict[tuple[str, str], _QueueSignal] = {}
-        self._signals_guard = threading.Lock()
+        self._signals_guard = make_lock("signals")
         # Leader-local per-colony assign serialization for the HA path (the
         # shared db.colony_lock cannot be held across a Raft proposal: the
         # commit is applied on another thread that needs that same lock).
@@ -309,6 +311,7 @@ class ColoniesServer:
             raise TimeoutError_("no process assigned within timeout")
         return p.to_dict()
 
+    @no_locks_held()
     def assign(self, colony: str, ex: Executor, timeout: float) -> Process | None:
         """Long-poll assignment (paper §3.3: the server *hangs* the request).
 
@@ -340,7 +343,9 @@ class ColoniesServer:
         with self._signals_guard:
             lk = self._local_assign_locks.get(colony)
             if lk is None:
-                lk = self._local_assign_locks[colony] = threading.RLock()
+                lk = self._local_assign_locks[colony] = make_lock(
+                    f"assignlocal:{colony}"
+                )
             return lk
 
     def _try_assign_once(self, colony: str, ex: Executor) -> Process | None:
@@ -549,6 +554,7 @@ class ColoniesServer:
         return stats
 
     # -- failsafe (paper §3.4) --------------------------------------------------
+    @no_locks_held()
     def failsafe_scan(self) -> dict:
         """One failsafe pass; returns counters (also used by tests).
 
@@ -647,7 +653,7 @@ class ColoniesServer:
         with self._signals_guard:
             sig = self._signals.get(key)
             if sig is None:
-                sig = self._signals[key] = _QueueSignal()
+                sig = self._signals[key] = _QueueSignal(key)
             return sig
 
     def _notify_queue(self, keys: list[tuple[str, str]] | None = None) -> None:

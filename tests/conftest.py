@@ -13,6 +13,21 @@ from repro.core import Colonies, ColoniesServer, Crypto, InProcTransport, Memory
 from repro.core.cluster import standalone_server
 
 
+def pytest_sessionfinish(session, exitstatus):
+    """Under REPRO_LOCK_CHECK=1, any recorded lock-order violation fails
+    the whole run — the detector is a CI gate, not just a logger."""
+    if os.environ.get("REPRO_LOCK_CHECK", "") in ("", "0"):
+        return
+    from repro.analysis import locktrack
+
+    vs = locktrack.violations()
+    if vs:
+        print(f"\nREPRO_LOCK_CHECK: {len(vs)} violation(s):", file=sys.stderr)
+        for v in vs:
+            print(f"  [{v['kind']}] ({v['thread']}) {v['msg']}", file=sys.stderr)
+        session.exitstatus = 3
+
+
 @pytest.fixture(scope="session")
 def server_keys():
     prv = Crypto.prvkey()

@@ -254,11 +254,11 @@ def test_sqlite_migration_resequences_colliding_revisions(tmp_path):
     db = SqliteDatabase(path)
     files = db.cfs_list("scale", "/dup")
     assert len(files) == 1  # heads only
-    revs = sorted(
-        r for (r,) in db._exec(
+    with db._lock:
+        rows = db._exec(
             "SELECT revision FROM cfs_files WHERE colonyname='scale' AND label='/dup'"
         ).fetchall()
-    )
+    revs = sorted(r for (r,) in rows)
     assert revs == [1, 2]  # both rows survived, re-sequenced
     assert db.cfs_get_file("scale", "aaaa") is not None
     assert db.cfs_get_file("scale", "bbbb") is not None

@@ -155,3 +155,99 @@ def test_generator_timeout_flush(colony):
     assert gen_ext.tick() == 0
     time.sleep(0.25)
     assert gen_ext.tick() == 1  # timeout flush
+
+
+# ---------------------------------------------------------------------------
+# First-class cron/generator tables (no kv scans on the leader tick)
+# ---------------------------------------------------------------------------
+
+
+def _cron_entry(cronid, colony, deadline, **kw):
+    e = {
+        "cronid": cronid,
+        "colonyname": colony,
+        "name": cronid,
+        "interval": 1.0,
+        "cronexpr": "",
+        "workflow": WF,
+        "deadline": deadline,
+        "lastrun": 0,
+        "runs": 0,
+        "lastworkflowid": "",
+        "added": deadline,
+    }
+    e.update(kw)
+    return e
+
+
+@pytest.mark.parametrize("db_factory", [None, "sqlite"])
+def test_cron_due_uses_deadline_index(db_factory, tmp_path):
+    from repro.core import MemoryDatabase, SqliteDatabase
+
+    db = MemoryDatabase() if db_factory is None else SqliteDatabase(
+        str(tmp_path / "c.db")
+    )
+    db.cron_put(_cron_entry("early", "c1", 100))
+    db.cron_put(_cron_entry("late", "c1", 10_000))
+    db.cron_put(_cron_entry("other", "c2", 150))
+    due = db.cron_due(200)
+    assert sorted(e["cronid"] for e in due) == ["early", "other"]
+    # removal invalidates (memdb: stale heap entry is dropped lazily)
+    db.cron_del("early")
+    assert [e["cronid"] for e in db.cron_due(200)] == ["other"]
+    # rescheduling re-arms: the old deadline no longer fires
+    db.cron_put(_cron_entry("other", "c2", 50_000))
+    assert db.cron_due(200) == []
+    assert [e["cronid"] for e in db.cron_due(60_000)] == ["late", "other"]
+
+
+@pytest.mark.parametrize("db_factory", [None, "sqlite"])
+def test_cron_generator_listings_are_per_colony(db_factory, tmp_path):
+    from repro.core import MemoryDatabase, SqliteDatabase
+
+    db = MemoryDatabase() if db_factory is None else SqliteDatabase(
+        str(tmp_path / "l.db")
+    )
+    db.cron_put(_cron_entry("a", "c1", 1))
+    db.cron_put(_cron_entry("b", "c2", 2))
+    assert [e["cronid"] for e in db.cron_list("c1")] == ["a"]
+    g1 = {"generatorid": "g1", "colonyname": "c1", "queuesize": 2, "added": 1}
+    g2 = {"generatorid": "g2", "colonyname": "c2", "queuesize": 2, "added": 2}
+    db.generator_put(g1)
+    db.generator_put(g2)
+    assert [g["generatorid"] for g in db.generator_list("c2")] == ["g2"]
+    assert {g["generatorid"] for g in db.generator_all()} == {"g1", "g2"}
+    db.generator_del("g1")
+    assert db.generator_get("g1") is None
+    assert [g["generatorid"] for g in db.generator_all()] == ["g2"]
+
+
+def test_sqlite_migration_lifts_cron_generator_kv_rows(tmp_path):
+    """Seed databases stored crons/generators as kv JSON blobs; opening
+    the file lifts them into the indexed tables and drops the kv copies."""
+    from repro.core import SqliteDatabase
+
+    path = str(tmp_path / "old.db")
+    old = SqliteDatabase(path)
+    cron = _cron_entry("legacy-cron", "dev", 123, runs=7)
+    gen = {
+        "generatorid": "legacy-gen",
+        "colonyname": "dev",
+        "name": "g",
+        "workflow": WF,
+        "queuesize": 3,
+        "timeout": 0,
+        "firstpack": 0,
+        "runs": 2,
+    }
+    old.kv_put("crons", cron["cronid"], cron)
+    old.kv_put("generators", gen["generatorid"], gen)
+
+    db = SqliteDatabase(path)  # migration runs on open
+    assert db.cron_get("legacy-cron")["runs"] == 7
+    assert [e["cronid"] for e in db.cron_list("dev")] == ["legacy-cron"]
+    assert [e["cronid"] for e in db.cron_due(200)] == ["legacy-cron"]
+    assert db.generator_get("legacy-gen")["queuesize"] == 3
+    # single source of truth: the kv rows are gone
+    assert db.kv_list("crons") == []
+    assert db.kv_list("generators") == []

@@ -137,3 +137,20 @@ def test_snapshot_listing_and_removal(colony, cfs):
     client.remove_snapshot("dev", snap["snapshotid"], colony["colony_prv"])
     with pytest.raises(NotFoundError):
         client.get_snapshot("dev", snap["snapshotid"], colony["colony_prv"])
+
+
+def test_get_snapshots_lists_whole_colony(colony, cfs):
+    """Per-colony snapshot listing RPC — indexed, oldest first."""
+    client = colony["client"]
+    cfs.upload_bytes("dev", "/list/a", "fa", b"a")
+    cfs.upload_bytes("dev", "/list/b", "fb", b"b")
+    s1 = client.create_snapshot("dev", "/list/a", "first", colony["colony_prv"])
+    s2 = client.create_snapshot("dev", "/list/b", "second", colony["colony_prv"])
+    listed = client.get_snapshots("dev", colony["colony_prv"])
+    ids = [s["snapshotid"] for s in listed]
+    assert ids.index(s1["snapshotid"]) < ids.index(s2["snapshotid"])
+    names = {s["snapshotid"]: s["name"] for s in listed}
+    assert names[s1["snapshotid"]] == "first"
+    client.remove_snapshot("dev", s1["snapshotid"], colony["colony_prv"])
+    left = [s["snapshotid"] for s in client.get_snapshots("dev", colony["colony_prv"])]
+    assert s1["snapshotid"] not in left and s2["snapshotid"] in left
