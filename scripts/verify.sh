@@ -12,6 +12,13 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # any violation; there is no suppression mechanism.
 python -m repro.analysis.lint
 
+# Static authorization lint + permission-matrix drift gate (see
+# SECURITY.md): every registered RPC handler must establish an auth fact
+# before touching the database, and the committed matrix must match the
+# handler tables.
+python -m repro.analysis.authlint
+python -m repro.analysis.authmap --check
+
 if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -q
 else
@@ -23,5 +30,10 @@ fi
 # violations (recorded violations fail the stress assertion).
 REPRO_LOCK_CHECK=1 python -m pytest -q tests/test_concurrency.py \
     tests/test_http_and_ha.py tests/test_failsafe.py
+
+# Runtime auth-fact contracts over the full RPC surface: colony-scoped
+# database access inside a handler dispatch raises without a recorded
+# (identity, colony, role) fact.
+REPRO_AUTH_CHECK=1 python -m pytest -q -m "not slow"
 
 python -m benchmarks.run broker cfs

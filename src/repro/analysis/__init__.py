@@ -1,35 +1,66 @@
-"""Concurrency-contract analysis for the ColonyOS broker core.
+"""Concurrency- and authorization-contract analysis for the ColonyOS core.
 
-Three tools, one contract (see CONCURRENCY.md):
+Two contract planes, each with a runtime detector and a static lint:
+
+Concurrency (see CONCURRENCY.md):
 
 * :mod:`repro.analysis.locktrack` — a runtime lock-order detector.
   ``make_lock(name)`` hands out plain ``threading.RLock`` objects unless
   ``REPRO_LOCK_CHECK=1`` (or :func:`locktrack.enable`), in which case it
   returns :class:`TrackedRLock` instances that record per-thread held-lock
-  sets, build the global lock-order graph, and report cycles, acquisition
+  sets, build the global lock-order graph, report cycles, acquisition
   under a leaf lock (``_glock``), cross-shard nesting, and condition-waits
-  entered while holding other locks.
+  entered while holding other locks — and record per-family lock
+  hold-time stats (max/mean, long-hold warnings).
 * :mod:`repro.analysis.contracts` — ``@requires_lock("shard")`` /
   ``@no_locks_held(...)`` decorators turning the "called with the shard
   lock held" comments into runtime-checked declarations.
 * :mod:`repro.analysis.lint` — ``python -m repro.analysis.lint``, a
   stdlib-``ast`` static pass enforcing the repo's concurrency and hygiene
-  rules (shard methods declare contracts, no ``kv_list`` scans outside
-  migrations, no blocking under ``_glock``, no bare ``except``, no
-  mutable default args).
+  rules (LNT001–LNT005).
+
+Authorization (see SECURITY.md):
+
+* :mod:`repro.analysis.authtrack` — runtime auth-fact contracts behind
+  ``REPRO_AUTH_CHECK=1``: the server records each verified
+  ``(identity, colony, role)``; colony-scoped ``Database`` entry points
+  and ``@requires_auth(role)``-decorated internals raise
+  :class:`AuthContractError` when no matching fact was recorded.
+* :mod:`repro.analysis.authlint` — ``python -m repro.analysis.authlint``,
+  a stdlib-``ast`` interprocedural pass proving every registered RPC
+  handler authorizes before touching the database (AUT001–AUT004).
+* :mod:`repro.analysis.authmap` — ``python -m repro.analysis.authmap``,
+  which generates the payloadtype → required-role permission matrix in
+  SECURITY.md (``--check`` gates drift in CI).
 """
 
+from .authtrack import AuthContractError, requires_auth
 from .contracts import LockContractError, no_locks_held, requires_lock
-from .locktrack import TrackedRLock, enable, is_enabled, make_lock, reset, violations
+from .locktrack import (
+    TrackedRLock,
+    enable,
+    hold_stats,
+    hold_warnings,
+    is_enabled,
+    make_lock,
+    reset,
+    set_hold_warn_ms,
+    violations,
+)
 
 __all__ = [
+    "AuthContractError",
     "LockContractError",
     "TrackedRLock",
     "enable",
+    "hold_stats",
+    "hold_warnings",
     "is_enabled",
     "make_lock",
     "no_locks_held",
+    "requires_auth",
     "requires_lock",
     "reset",
+    "set_hold_warn_ms",
     "violations",
 ]

@@ -33,6 +33,15 @@ empty. Contract decorators (contracts.py) raise, because they guard
 single functions and a violation there is a programming error at a
 well-defined boundary.
 
+Tracked locks also record **hold times**: per family, the count of
+holds, total/max held nanoseconds, and which instance held longest.
+Time under a ``Condition.wait()`` does not count as holding (the lock
+is released while parked). Holds longer than the warn threshold
+(``REPRO_LOCK_HOLD_WARN_MS``, default 50ms, or :func:`set_hold_warn_ms`)
+are logged via :func:`hold_warnings` — kept separate from
+:func:`violations` so a slow CI box never fails the correctness gate —
+and the atexit summary prints the top holders by max hold time.
+
 Lock names are ``"family"`` or ``"family:instance"``; the family is the
 text before the first ``:``.
 """
@@ -43,6 +52,7 @@ import atexit
 import os
 import sys
 import threading
+import time
 
 # Families that must guard only straight-line, non-blocking code: nothing
 # may be acquired while one is held.
@@ -66,6 +76,12 @@ class _Registry:
         # (held_family, acquired_family) -> first-seen "lockA -> lockB"
         self.edges: dict[tuple[str, str], str] = {}
         self.violations: list[dict] = []
+        # family -> {count, total_ns, max_ns, max_lock}
+        self.holds: dict[str, dict] = {}
+        self.hold_warnings: list[dict] = []
+        self.hold_warn_ns = int(
+            float(os.environ.get("REPRO_LOCK_HOLD_WARN_MS", "50")) * 1e6
+        )
 
 
 _REG = _Registry()
@@ -80,6 +96,14 @@ def _held() -> dict["TrackedRLock", int]:
     return d
 
 
+def _hold_t0() -> dict["TrackedRLock", int]:
+    """Per-thread monotonic_ns timestamp of each lock's outermost acquire."""
+    d = getattr(_TLS, "hold_t0", None)
+    if d is None:
+        d = _TLS.hold_t0 = {}
+    return d
+
+
 def is_enabled() -> bool:
     return _REG.enabled
 
@@ -90,10 +114,12 @@ def enable(on: bool = True) -> None:
 
 
 def reset() -> None:
-    """Clear the order graph and violation log (test isolation)."""
+    """Clear the order graph, violation log, and hold stats (test isolation)."""
     with _REG.guard:
         _REG.edges.clear()
         _REG.violations.clear()
+        _REG.holds.clear()
+        _REG.hold_warnings.clear()
 
 
 def violations() -> list[dict]:
@@ -104,6 +130,55 @@ def violations() -> list[dict]:
 def order_edges() -> dict[tuple[str, str], str]:
     with _REG.guard:
         return dict(_REG.edges)
+
+
+def hold_stats() -> dict[str, dict]:
+    """Per-family hold-time stats: count, total_ns, max_ns, mean_ns, max_lock."""
+    with _REG.guard:
+        out = {}
+        for fam, st in _REG.holds.items():
+            d = dict(st)
+            d["mean_ns"] = st["total_ns"] / st["count"] if st["count"] else 0.0
+            out[fam] = d
+        return out
+
+
+def hold_warnings() -> list[dict]:
+    """Holds that exceeded the warn threshold (not counted as violations)."""
+    with _REG.guard:
+        return [dict(w) for w in _REG.hold_warnings]
+
+
+def set_hold_warn_ms(ms: float) -> None:
+    """Set the long-hold warn threshold (tests / tuning)."""
+    with _REG.guard:
+        _REG.hold_warn_ns = int(ms * 1e6)
+
+
+def _record_hold(lock: "TrackedRLock", dur_ns: int) -> None:
+    with _REG.guard:
+        st = _REG.holds.get(lock.family)
+        if st is None:
+            st = _REG.holds[lock.family] = {
+                "count": 0,
+                "total_ns": 0,
+                "max_ns": 0,
+                "max_lock": lock.name,
+            }
+        st["count"] += 1
+        st["total_ns"] += dur_ns
+        if dur_ns > st["max_ns"]:
+            st["max_ns"] = dur_ns
+            st["max_lock"] = lock.name
+        if dur_ns >= _REG.hold_warn_ns:
+            _REG.hold_warnings.append(
+                {
+                    "lock": lock.name,
+                    "family": lock.family,
+                    "held_ns": dur_ns,
+                    "thread": threading.current_thread().name,
+                }
+            )
 
 
 def _record(kind: str, msg: str) -> None:
@@ -197,7 +272,10 @@ class TrackedRLock:
         ok = self._inner.acquire(blocking, timeout)
         if ok:
             held = _held()
-            held[self] = held.get(self, 0) + 1
+            n = held.get(self, 0)
+            held[self] = n + 1
+            if n == 0:  # outermost acquire: hold starts now
+                _hold_t0()[self] = time.monotonic_ns()
         return ok
 
     def release(self) -> None:
@@ -206,6 +284,9 @@ class TrackedRLock:
         n = held.get(self, 0) - 1
         if n <= 0:
             held.pop(self, None)
+            t0 = _hold_t0().pop(self, None)
+            if t0 is not None:
+                _record_hold(self, time.monotonic_ns() - t0)
         else:
             held[self] = n
 
@@ -230,6 +311,11 @@ class TrackedRLock:
                     f"condition wait on {self.name} while holding {others}",
                 )
         count = _held().pop(self, 0)
+        # The wait releases this lock: close out the hold now so parked
+        # time is not billed as held time.
+        t0 = _hold_t0().pop(self, None)
+        if t0 is not None:
+            _record_hold(self, time.monotonic_ns() - t0)
         return (self._inner._release_save(), count)
 
     def _acquire_restore(self, state) -> None:
@@ -237,6 +323,7 @@ class TrackedRLock:
         self._inner._acquire_restore(inner_state)
         if count:
             _held()[self] = count
+            _hold_t0()[self] = time.monotonic_ns()
 
     def held_by_current_thread(self) -> bool:
         return self in _held()
@@ -259,6 +346,29 @@ def _report_at_exit() -> None:
         )
         for v in vs:
             print(f"  [{v['kind']}] ({v['thread']}) {v['msg']}", file=sys.stderr)
+    stats = hold_stats()
+    if stats:
+        top = sorted(stats.items(), key=lambda kv: kv[1]["max_ns"], reverse=True)
+        print("REPRO_LOCK_CHECK: lock hold times (top families by max):", file=sys.stderr)
+        for fam, st in top[:8]:
+            print(
+                f"  {fam:12s} holds={st['count']:<8d}"
+                f" mean={st['mean_ns'] / 1e3:8.1f}us"
+                f" max={st['max_ns'] / 1e3:10.1f}us ({st['max_lock']})",
+                file=sys.stderr,
+            )
+    warns = hold_warnings()
+    if warns:
+        print(
+            f"REPRO_LOCK_CHECK: {len(warns)} hold(s) exceeded the warn"
+            f" threshold ({_REG.hold_warn_ns / 1e6:.0f}ms):",
+            file=sys.stderr,
+        )
+        for w in warns[:10]:
+            print(
+                f"  {w['lock']} held {w['held_ns'] / 1e6:.1f}ms ({w['thread']})",
+                file=sys.stderr,
+            )
 
 
 if _REG.enabled:  # pragma: no cover - exercised via REPRO_LOCK_CHECK=1 runs

@@ -123,6 +123,9 @@ class Colonies:
             colony_prvkey,
         )
 
+    def list_users(self, colonyname: str, prvkey: str) -> list[dict]:
+        return self._rpc("listusers", {"colonyname": colonyname}, prvkey)
+
     def add_function(
         self, executorid: str, colonyname: str, funcname: str, executor_prvkey: str
     ) -> dict:

@@ -48,6 +48,7 @@ import sqlite3
 import threading
 from typing import Any, Iterable
 
+from ..analysis.authtrack import guard_database_subclass
 from ..analysis.contracts import requires_lock
 from ..analysis.locktrack import make_lock
 from .errors import ConflictError, NotFoundError
@@ -65,6 +66,13 @@ from .process import (
 
 class Database:
     """Abstract storage interface shared by all Colonies server replicas."""
+
+    def __init_subclass__(cls, **kwargs) -> None:
+        super().__init_subclass__(**kwargs)
+        # Under REPRO_AUTH_CHECK=1, colony-scoped entry points refuse to
+        # run inside a request that never recorded an auth fact for the
+        # colony they touch (see repro/analysis/authtrack.py, SECURITY.md).
+        guard_database_subclass(cls)
 
     # -- colonies ---------------------------------------------------------
     def add_colony(self, colony: Colony) -> None:
@@ -227,6 +235,24 @@ class Database:
         """Every generator (leader tick); first-class table iteration."""
         raise NotImplementedError
 
+    # -- colony users (server.py `_require_member`; paper Table 5) ----------
+    # First-class table keyed by userid with a per-colony listing index,
+    # so membership checks stay O(1) and `listusers` never scans other
+    # colonies (the kv bucket the seed used survives as a migration source).
+    def user_put(self, entry: dict) -> None:
+        """Insert or update a user (keyed by ``entry['userid']``)."""
+        raise NotImplementedError
+
+    def user_get(self, userid: str) -> dict | None:
+        raise NotImplementedError
+
+    def user_del(self, userid: str) -> None:
+        raise NotImplementedError
+
+    def user_list(self, colony: str) -> list[dict]:
+        """All users of one colony, sorted by name (indexed per colony)."""
+        raise NotImplementedError
+
     # -- key/value side tables (cron, generators, CFS metadata) -------------
     def kv_put(self, table: str, key: str, value: dict) -> None:
         raise NotImplementedError
@@ -340,6 +366,10 @@ class MemoryDatabase(Database):
         self._cron_heap: list[tuple[int, str]] = []
         self._generators: dict[str, dict[str, dict]] = {}
         self._generator_colony: dict[str, str] = {}
+        # Colony users: colony -> userid -> entry, with a reverse map for
+        # the id-keyed membership check (`_require_member`).
+        self._users: dict[str, dict[str, dict]] = {}
+        self._user_colony: dict[str, str] = {}
         # Observability for bounded-work regression tests/benchmarks.
         self.metrics: dict[str, int] = {
             "deadline_pops": 0,
@@ -1006,6 +1036,36 @@ class MemoryDatabase(Database):
                 for e in per_colony.values()
             ]
 
+    # colony users
+    def user_put(self, entry: dict) -> None:
+        with self._glock:
+            colony = entry["colonyname"]
+            old = self._user_colony.get(entry["userid"])
+            if old is not None and old != colony:
+                self._users.get(old, {}).pop(entry["userid"], None)
+            self._users.setdefault(colony, {})[entry["userid"]] = dict(entry)
+            self._user_colony[entry["userid"]] = colony
+
+    def user_get(self, userid: str) -> dict | None:
+        with self._glock:
+            colony = self._user_colony.get(userid)
+            if colony is None:
+                return None
+            e = self._users.get(colony, {}).get(userid)
+            return dict(e) if e is not None else None
+
+    def user_del(self, userid: str) -> None:
+        with self._glock:
+            colony = self._user_colony.pop(userid, None)
+            if colony is not None:
+                self._users.get(colony, {}).pop(userid, None)
+
+    def user_list(self, colony: str) -> list[dict]:
+        with self._glock:
+            entries = [dict(e) for e in self._users.get(colony, {}).values()]
+        entries.sort(key=lambda e: (e.get("name", ""), e["userid"]))
+        return entries
+
 
 # ---------------------------------------------------------------------------
 # Sqlite backend — the paper's SQL queue, verbatim semantics
@@ -1068,6 +1128,10 @@ CREATE TABLE IF NOT EXISTS generators (
     generatorid TEXT PRIMARY KEY, colonyname TEXT NOT NULL, body TEXT NOT NULL
 );
 CREATE INDEX IF NOT EXISTS idx_generators_colony ON generators (colonyname);
+CREATE TABLE IF NOT EXISTS users (
+    userid TEXT PRIMARY KEY, colonyname TEXT NOT NULL, body TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_users_colony ON users (colonyname);
 CREATE TABLE IF NOT EXISTS cfs_pins (
     colonyname TEXT NOT NULL, fileid TEXT NOT NULL, snapshotid TEXT NOT NULL,
     PRIMARY KEY (colonyname, fileid, snapshotid)
@@ -1111,6 +1175,7 @@ class SqliteDatabase(Database):
             self._rebuild_counts_if_missing()
             self._migrate_cfs()
             self._migrate_cron_gen()
+            self._migrate_users()
             self._conn.commit()
 
     def _migrate(self) -> None:
@@ -1237,6 +1302,24 @@ class SqliteDatabase(Database):
                 (e["generatorid"], e["colonyname"], json.dumps(e)),
             )
         self._conn.execute("DELETE FROM kv WHERE tbl IN ('crons','generators')")
+
+    def _migrate_users(self) -> None:
+        """Backfill the first-class users table from the seed's kv rows.
+
+        Same pattern as :meth:`_migrate_cron_gen`: pre-index databases
+        stored colony users as opaque JSON under kv(tbl='users'), keyed
+        by the user's identity; lift them into the indexed table and drop
+        the kv copies.
+        """
+        for key, val in self._conn.execute(
+            "SELECT key, value FROM kv WHERE tbl='users'"
+        ).fetchall():
+            e = json.loads(val)
+            self._conn.execute(
+                "INSERT OR IGNORE INTO users VALUES (?,?,?)",
+                (e.get("userid", key), e.get("colonyname", ""), json.dumps(e)),
+            )
+        self._conn.execute("DELETE FROM kv WHERE tbl='users'")
 
     def _rebuild_counts_if_missing(self) -> None:
         have = self._conn.execute("SELECT COUNT(*) FROM proc_counts").fetchone()[0]
@@ -1847,3 +1930,34 @@ class SqliteDatabase(Database):
         with self._lock:
             rows = self._exec("SELECT body FROM generators").fetchall()
             return [json.loads(r[0]) for r in rows]
+
+    # colony users
+    def user_put(self, entry: dict) -> None:
+        with self._lock:
+            self._exec(
+                "INSERT INTO users VALUES (?,?,?) ON CONFLICT(userid)"
+                " DO UPDATE SET colonyname=excluded.colonyname, body=excluded.body",
+                (entry["userid"], entry["colonyname"], json.dumps(entry)),
+            )
+            self._conn.commit()
+
+    def user_get(self, userid: str) -> dict | None:
+        with self._lock:
+            row = self._exec(
+                "SELECT body FROM users WHERE userid=?", (userid,)
+            ).fetchone()
+            return json.loads(row[0]) if row else None
+
+    def user_del(self, userid: str) -> None:
+        with self._lock:
+            self._exec("DELETE FROM users WHERE userid=?", (userid,))
+            self._conn.commit()
+
+    def user_list(self, colony: str) -> list[dict]:
+        with self._lock:
+            rows = self._exec(
+                "SELECT body FROM users WHERE colonyname=?", (colony,)
+            ).fetchall()
+        entries = [json.loads(r[0]) for r in rows]
+        entries.sort(key=lambda e: (e.get("name", ""), e["userid"]))
+        return entries

@@ -37,7 +37,10 @@ class _Handler(BaseHTTPRequestHandler):
         except (ValueError, json.JSONDecodeError):
             self._reply(400, {"error": "malformed request", "status": 400})
             return
-        resp = self.colonies.handle(envelope)  # may hang (long-poll assign)
+        # external=True: envelopes that crossed the network are always
+        # signature-verified, even on servers built with
+        # verify_signatures=False (that path is in-process-only).
+        resp = self.colonies.handle(envelope, external=True)  # may hang (long-poll)
         status = int(resp.get("status", 200)) if "error" in resp else 200
         self._reply(status, resp)
 

@@ -28,14 +28,28 @@ def sign_envelope(payloadtype: str, payload: dict, prvkey: str) -> dict:
     return {"payloadtype": payloadtype, "payload": body, "signature": sig}
 
 
-def open_envelope(env: dict, verify: bool = True) -> tuple[str, str, dict[str, Any]]:
-    """Returns (identity, payloadtype, payload). Raises AuthError on tamper."""
+def open_envelope(
+    env: dict, verify: bool = True, allow_unverified: bool = False
+) -> tuple[str, str, dict[str, Any]]:
+    """Returns (identity, payloadtype, payload). Raises AuthError on tamper.
+
+    ``verify=False`` trusts the envelope's bare ``identity`` claim and is
+    legitimate only for in-process benchmark/test harnesses: the caller
+    must opt in with ``allow_unverified=True`` so a transport can never
+    reach the unverified path by accident (network transports always
+    verify — see ``ColoniesServer.handle(external=True)``).
+    """
     ptype = env.get("payloadtype", "")
     body = env.get("payload", "")
     if isinstance(body, dict):  # allow pre-parsed payloads on the in-proc path
         body = canonical(body)
     payload = json.loads(body) if body else {}
     if not verify:
+        if not allow_unverified:
+            raise AuthError(
+                "open_envelope(verify=False) requires allow_unverified=True"
+                " (in-process harnesses only; never trust, always verify)"
+            )
         return env.get("identity", "unverified"), ptype, payload
     sig = env.get("signature", "")
     if not sig:

@@ -33,6 +33,8 @@ from __future__ import annotations
 import threading
 from typing import Any, Callable
 
+from ..analysis import authtrack
+from ..analysis.authtrack import requires_auth
 from ..analysis.contracts import no_locks_held
 from ..analysis.locktrack import make_lock
 from .database import Database, MemoryDatabase
@@ -59,6 +61,8 @@ from .process import (
 from .security import open_envelope
 from .spec import FunctionSpec, WorkflowSpec
 
+# The seed's kv bucket for colony users; survives only as the sqlite
+# migration source (users are a first-class indexed table now).
 USERS_TABLE = "users"
 
 
@@ -111,6 +115,7 @@ class ColoniesServer:
             "removeexecutor": self._h_remove_executor,
             "listexecutors": self._h_list_executors,
             "adduser": self._h_add_user,
+            "listusers": self._h_list_users,
             "addfunction": self._h_add_function,
             "listfunctions": self._h_list_functions,
             "submitfunctionspec": self._h_submit,
@@ -132,11 +137,18 @@ class ColoniesServer:
         self._failsafe_thread: threading.Thread | None = None
 
     # ------------------------------------------------------------------ RPC
-    def handle(self, envelope: dict) -> dict:
-        """Entry point for all transports. Returns {"error":...} or {"result":...}."""
+    def handle(self, envelope: dict, external: bool = False) -> dict:
+        """Entry point for all transports. Returns {"error":...} or {"result":...}.
+
+        ``external=True`` (set by network transports) forces signature
+        verification regardless of ``verify_signatures``: the unverified
+        path exists only for in-process benchmark/test harnesses, never
+        for envelopes that crossed a trust boundary (paper §3.4.6).
+        """
         try:
+            verify = self.verify_signatures or external
             identity, ptype, payload = open_envelope(
-                envelope, verify=self.verify_signatures
+                envelope, verify=verify, allow_unverified=not verify
             )
             handler = self._handlers.get(ptype)
             if handler is None:
@@ -146,7 +158,11 @@ class ColoniesServer:
                         break
             if handler is None:
                 raise ValidationError(f"unknown payloadtype {ptype!r}")
-            result = handler(identity, payload)
+            # Under REPRO_AUTH_CHECK=1 the scope arms the database guards:
+            # colony-scoped access inside this dispatch requires a recorded
+            # auth fact (see repro/analysis/authtrack.py).
+            with authtrack.request_scope():
+                result = handler(identity, payload)
             return {"result": result}
         except NotLeaderError as e:
             return {"error": str(e), "status": e.status, "leader": e.leader}
@@ -154,30 +170,38 @@ class ColoniesServer:
             return {"error": str(e), "status": e.status}
 
     # ------------------------------------------------------------ auth utils
+    # Each check records its verified (identity, colony, role) as an auth
+    # fact for the current request (a no-op unless REPRO_AUTH_CHECK=1);
+    # colony-scoped database access without a matching fact then raises.
     def _require_server_owner(self, identity: str) -> None:
         if identity != self.serverid:
             raise AuthError("requires server owner")
+        authtrack.record(identity, authtrack.ANY_COLONY, "server")
 
     def _require_colony_owner(self, identity: str, colonyname: str) -> Colony:
         colony = self.db.get_colony(colonyname)
         if identity != colony.colonyid:
             raise AuthError("requires colony owner")
+        authtrack.record(identity, colonyname, "owner")
         return colony
 
     def _require_member(self, identity: str, colonyname: str) -> Executor | None:
         """Approved executor OR registered user OR colony owner."""
         colony = self.db.get_colony(colonyname)
         if identity == colony.colonyid:
+            authtrack.record(identity, colonyname, "owner")
             return None
         try:
             ex = self.db.get_executor(identity)
             if ex.colonyname == colonyname and ex.state == "approved":
+                authtrack.record(identity, colonyname, "executor")
                 self.db.touch_executor(identity, now_ns())
                 return ex
         except NotFoundError:
             pass
-        user = self.db.kv_get(USERS_TABLE, identity)
+        user = self.db.user_get(identity)
         if user is not None and user.get("colonyname") == colonyname:
+            authtrack.record(identity, colonyname, "member")
             return None
         raise AuthError("identity is not a member of the colony")
 
@@ -190,6 +214,7 @@ class ColoniesServer:
             raise AuthError("executor belongs to another colony")
         if ex.state != "approved":
             raise AuthError(f"executor not approved (state={ex.state})")
+        authtrack.record(identity, colonyname, "executor")
         self.db.touch_executor(identity, now_ns())
         return ex
 
@@ -243,8 +268,13 @@ class ColoniesServer:
             "username": payload.get("username", ""),
             "colonyname": colony,
         }
-        self.db.kv_put(USERS_TABLE, payload["userid"], user)
+        self.db.user_put(user)
         return user
+
+    def _h_list_users(self, identity: str, payload: dict) -> list[dict]:
+        colony = payload["colonyname"]
+        self._require_member(identity, colony)
+        return self.db.user_list(colony)
 
     def _h_add_function(self, identity: str, payload: dict) -> dict:
         colony = payload["colonyname"]
@@ -292,6 +322,7 @@ class ColoniesServer:
             "processes": [p.to_dict() for p in procs],
         }
 
+    @requires_auth("member")
     def submit_workflow_processes(self, wf: WorkflowSpec) -> list[Process]:
         """DAG expansion (paper §3.4.2): one process per node, linked by ids."""
         from .workflow import expand_workflow
@@ -382,6 +413,7 @@ class ColoniesServer:
                 return self.db.get_process(p.processid)
         return None
 
+    @requires_auth("executor")
     def apply_assign(self, op: dict) -> None:
         """State-machine apply for an assign op (also invoked by Raft commit).
 
@@ -428,6 +460,7 @@ class ColoniesServer:
         self.close_process(p, succeeded, output, errors, ex.executorid)
         return self.db.get_process(pid).to_dict()
 
+    @requires_auth("executor")
     def close_process(
         self,
         p: Process,

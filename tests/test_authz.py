@@ -1,0 +1,403 @@
+"""Zero-trust authorization analysis (SECURITY.md).
+
+Four layers under test (src/repro/analysis):
+  * authlint catches *seeded* broken handlers, one per AUT rule, and the
+    repo itself lints clean with zero suppressions;
+  * the runtime auth-fact contracts (REPRO_AUTH_CHECK=1) pass on the real
+    RPC surface and catch a deliberately bypassing handler;
+  * the generated permission matrix in SECURITY.md matches the code;
+  * the satellite planes: the first-class users table (both backends,
+    listusers RPC, kv migration) and the hardened unverified-envelope
+    opt-in.
+"""
+
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import authtrack
+from repro.analysis.authlint import lint_source
+from repro.analysis.authlint import run as authlint_run
+from repro.analysis.authtrack import ANY_COLONY, AuthContractError, requires_auth
+from repro.core import (
+    Colonies,
+    Crypto,
+    ExecutorBase,
+    FunctionSpec,
+    InProcTransport,
+    MemoryDatabase,
+    SqliteDatabase,
+)
+from repro.core.cluster import standalone_server
+from repro.core.errors import AuthError
+from repro.core.security import open_envelope, sign_envelope
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _rules(src):
+    return [v.rule for v in lint_source(textwrap.dedent(src), "fixture.py")]
+
+
+# ---------------------------------------------------------------------------
+# Seeded-violation proofs: every AUT rule actually fires
+# ---------------------------------------------------------------------------
+
+
+def test_authlint_catches_missing_auth():
+    """AUT001: handler touches the db, never establishes any auth fact."""
+    rules = _rules(
+        """
+        class S:
+            def _h_peek(self, identity, payload):
+                return self.db.kv_get("misc", payload["key"])
+        """
+    )
+    assert rules == ["AUT001"]
+
+
+def test_authlint_catches_missing_auth_interprocedurally():
+    """AUT001 through a helper: the db touch hides one call deep."""
+    rules = _rules(
+        """
+        class S:
+            def _lookup(self, key):
+                return self.db.kv_get("misc", key)
+
+            def _h_peek(self, identity, payload):
+                return self._lookup(payload["key"])
+        """
+    )
+    assert "AUT001" in rules
+
+
+def test_authlint_catches_confused_deputy():
+    """AUT002: membership verified for one colony, db acts on another."""
+    rules = _rules(
+        """
+        class S:
+            def _h_swap(self, identity, payload):
+                self._require_member(identity, payload["colonyname"])
+                return self.db.list_executors(payload["other"])
+        """
+    )
+    assert "AUT002" in rules
+
+
+def test_authlint_catches_unverified_envelope():
+    """AUT003: both verify=False and verify_signatures=False literals."""
+    rules = _rules(
+        """
+        from repro.core.security import open_envelope
+        from repro.core.server import ColoniesServer
+
+        identity, ptype, payload = open_envelope(env, verify=False)
+        srv = ColoniesServer("sid", verify_signatures=False)
+        """
+    )
+    assert rules == ["AUT003", "AUT003"]
+
+
+def test_authlint_catches_fetch_before_auth():
+    """AUT004: a listing (not an id-keyed fetch) precedes the auth fact."""
+    rules = _rules(
+        """
+        class S:
+            def _h_eager(self, identity, payload):
+                rows = self.db.list_processes(payload["colonyname"], "waiting", 10)
+                self._require_member(identity, payload["colonyname"])
+                return rows
+        """
+    )
+    assert "AUT004" in rules
+
+
+def test_authlint_accepts_fetch_then_authorize():
+    """The legitimate pattern: id-keyed fetch names the colony, then the
+    check, then writes keyed by the same fetched colony."""
+    rules = _rules(
+        """
+        class S:
+            def _h_run(self, identity, payload):
+                entry = self.db.cron_get(payload["cronid"])
+                self._require_member(identity, entry["colonyname"])
+                self.db.cron_put(entry)
+                return entry
+        """
+    )
+    assert rules == []
+
+
+def test_authlint_resolves_colony_through_assignment_and_get():
+    """Canonicalization: `c = payload.get("colonyname", "")` names the
+    same value as `payload["colonyname"]` — no false confused-deputy."""
+    rules = _rules(
+        """
+        class S:
+            def _h_list(self, identity, payload):
+                c = payload.get("colonyname", "")
+                self._require_member(identity, c)
+                return self.db.list_executors(payload["colonyname"])
+        """
+    )
+    assert rules == []
+
+
+def test_authlint_server_owner_covers_any_colony():
+    rules = _rules(
+        """
+        class S:
+            def _h_admin(self, identity, payload):
+                self._require_server_owner(identity)
+                return self.db.list_executors(payload["colonyname"])
+        """
+    )
+    assert rules == []
+
+
+def test_authlint_repo_is_clean():
+    """The whole linted tree passes with zero suppressions, and every
+    registered handler was seen and role-annotated."""
+    paths = [os.path.join(REPO_ROOT, "src", "repro")]
+    examples = os.path.join(REPO_ROOT, "examples")
+    if os.path.exists(examples):
+        paths.append(examples)
+    nfiles, handlers, violations = authlint_run(paths)
+    assert violations == []
+    registered = [h for h in handlers if h.ptypes]
+    assert nfiles > 20 and len(registered) >= 30
+    assert all(h.role for h in registered)
+
+
+def test_authmap_matches_security_md(monkeypatch):
+    """CI drift gate: the committed permission matrix is what the handler
+    tables imply."""
+    from repro.analysis import authmap
+
+    monkeypatch.chdir(REPO_ROOT)
+    assert authmap.main(["--check"]) == 0
+
+
+def test_authmap_refuses_failing_tree(tmp_path):
+    from repro.analysis import authmap
+
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        textwrap.dedent(
+            """
+            class S:
+                def _h_leak(self, identity, payload):
+                    return self.db.kv_get("misc", payload["key"])
+            """
+        )
+    )
+    with pytest.raises(SystemExit):
+        authmap.generate([str(bad)])
+
+
+# ---------------------------------------------------------------------------
+# Runtime auth-fact contracts (REPRO_AUTH_CHECK=1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def auth_checking():
+    """Contracts on; restore the prior mode afterwards."""
+    prev = authtrack.is_enabled()
+    authtrack.enable(True)
+    yield
+    authtrack.enable(prev)
+
+
+def test_contracts_pass_on_real_rpc_surface(colony, auth_checking):
+    """Submit/assign/close plus listings, users, and stats all run with
+    the guards armed — every handler records the facts it needs."""
+    client = colony["client"]
+    ex = ExecutorBase(
+        client, colony["name"], "w-authz", "worker", colony_prvkey=colony["colony_prv"]
+    )
+    ex.register_function("echo", lambda ctx, *a: list(a))
+    spec = FunctionSpec.from_dict(
+        {
+            "conditions": {"colonyname": colony["name"], "executortype": "worker"},
+            "funcname": "echo",
+            "args": ["hi"],
+            "maxexectime": 60,
+        }
+    )
+    p = client.submit(spec, colony["colony_prv"])
+    assert ex.step(timeout=2.0)
+    done = client.get_process(p["processid"], colony["colony_prv"])
+    assert done["state"] == "successful" and done["out"] == ["hi"]
+
+    user_prv = Crypto.prvkey()
+    client.add_user(colony["name"], Crypto.id(user_prv), "alice", colony["colony_prv"])
+    # The registered user is a member: it may list, as may the owner.
+    assert [u["username"] for u in client.list_users(colony["name"], user_prv)] == [
+        "alice"
+    ]
+    assert client.list_executors(colony["name"], colony["colony_prv"])
+    assert client.stats(colony["name"], colony["colony_prv"])["successful"] >= 1
+
+
+def test_bypassing_handler_raises_contract_error(colony, auth_checking):
+    """A handler that skips its _require_* check dies on the db guard."""
+    srv = colony["server"]
+    srv._handlers["rogue"] = lambda identity, payload: srv.db.list_executors("dev")
+    env = sign_envelope("rogue", {}, colony["colony_prv"])
+    with pytest.raises(AuthContractError):
+        srv.handle(env)
+
+
+def test_wrong_colony_fact_raises_contract_error(colony, auth_checking):
+    """Runtime confused deputy: authorized for dev, acted on dev2."""
+    srv = colony["server"]
+    colony["client"].add_colony("dev2", Crypto.id(Crypto.prvkey()), colony["server_prv"])
+
+    def rogue(identity, payload):
+        srv._require_member(identity, "dev")
+        return srv.db.list_executors("dev2")
+
+    srv._handlers["rogue"] = rogue
+    env = sign_envelope("rogue", {}, colony["colony_prv"])
+    with pytest.raises(AuthContractError):
+        srv.handle(env)
+
+
+def test_requires_auth_pins_the_role(auth_checking):
+    @requires_auth("executor")
+    def internal():
+        return "ok"
+
+    assert internal() == "ok"  # outside any request scope: inert
+    with authtrack.request_scope():
+        with pytest.raises(AuthContractError):
+            internal()
+        authtrack.record("id1", "dev", "member")
+        with pytest.raises(AuthContractError):
+            internal()  # member does not satisfy executor
+        authtrack.record("id1", "dev", "executor")
+        assert internal() == "ok"
+
+
+def test_server_fact_satisfies_any_colony(auth_checking):
+    with authtrack.request_scope():
+        authtrack.record("srv", ANY_COLONY, "server")
+        assert authtrack.has_fact("anything", "member")
+        assert authtrack.has_fact("other", "owner")
+
+
+def test_guards_inert_outside_request_scope(auth_checking):
+    """Background ticks / direct db use have no request identity: the
+    guards must not fire there even with checking enabled."""
+    db = MemoryDatabase()
+    db.user_put({"userid": "u1", "colonyname": "dev", "name": "n"})
+    assert [u["userid"] for u in db.user_list("dev")] == ["u1"]
+    with authtrack.request_scope():
+        with pytest.raises(AuthContractError):
+            db.user_list("dev")
+
+
+def test_facts_are_request_scoped(auth_checking):
+    with authtrack.request_scope():
+        authtrack.record("id1", "dev", "member")
+        assert authtrack.facts()
+    assert authtrack.facts() == ()
+
+
+# ---------------------------------------------------------------------------
+# Users: first-class indexed table + listusers RPC
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make_db", [MemoryDatabase, SqliteDatabase])
+def test_user_table_roundtrip(make_db):
+    db = make_db()
+    db.user_put({"userid": "u1", "colonyname": "dev", "name": "bob"})
+    db.user_put({"userid": "u2", "colonyname": "dev", "name": "alice"})
+    db.user_put({"userid": "u3", "colonyname": "ops", "name": "eve"})
+    assert db.user_get("u1")["name"] == "bob"
+    assert db.user_get("missing") is None
+    # per-colony listing, sorted by name
+    assert [u["userid"] for u in db.user_list("dev")] == ["u2", "u1"]
+    # re-put moves the user between colonies (single source of truth)
+    db.user_put({"userid": "u1", "colonyname": "ops", "name": "bob"})
+    assert [u["userid"] for u in db.user_list("dev")] == ["u2"]
+    assert sorted(u["userid"] for u in db.user_list("ops")) == ["u1", "u3"]
+    db.user_del("u2")
+    assert db.user_get("u2") is None
+    assert db.user_list("dev") == []
+
+
+def test_listusers_rpc_and_membership(colony):
+    client = colony["client"]
+    user_prv = Crypto.prvkey()
+    client.add_user(colony["name"], Crypto.id(user_prv), "alice", colony["colony_prv"])
+    # owner and the registered user itself may list; a stranger may not
+    assert [u["username"] for u in client.list_users(colony["name"], colony["colony_prv"])] == ["alice"]
+    assert [u["username"] for u in client.list_users(colony["name"], user_prv)] == ["alice"]
+    with pytest.raises(AuthError):
+        client.list_users(colony["name"], Crypto.prvkey())
+    # a registered user is a member but NOT an executor: it may submit
+    # but never be assigned work
+    spec = {
+        "conditions": {"colonyname": colony["name"], "executortype": "worker"},
+        "funcname": "echo",
+        "maxexectime": 60,
+    }
+    client.submit(spec, user_prv)
+    with pytest.raises(AuthError):
+        client.assign(colony["name"], 0.1, user_prv)
+
+
+def test_sqlite_migration_lifts_user_kv_rows(tmp_path):
+    """Seed databases stored users as kv JSON keyed by identity; opening
+    the file lifts them into the indexed users table."""
+    path = str(tmp_path / "old.db")
+    old = SqliteDatabase(path)
+    old.kv_put(
+        "users",
+        "u-legacy",
+        {"userid": "u-legacy", "colonyname": "dev", "username": "legacy"},
+    )
+    db = SqliteDatabase(path)  # migration runs on open
+    assert db.user_get("u-legacy")["username"] == "legacy"
+    assert [u["userid"] for u in db.user_list("dev")] == ["u-legacy"]
+    # single source of truth: the kv rows are gone
+    assert db.kv_list("users") == []
+
+
+# ---------------------------------------------------------------------------
+# Hardened unverified-envelope path
+# ---------------------------------------------------------------------------
+
+
+def test_open_envelope_unverified_requires_opt_in():
+    env = {"payloadtype": "t", "payload": "", "identity": "abc"}
+    with pytest.raises(AuthError):
+        open_envelope(env, verify=False)
+    ident, ptype, _payload = open_envelope(env, verify=False, allow_unverified=True)
+    assert (ident, ptype) == ("abc", "t")
+
+
+def test_external_dispatch_always_verifies(server_keys):
+    """Even a verify_signatures=False server (in-proc benchmark mode)
+    rejects unsigned envelopes that crossed a network trust boundary."""
+    server_prv, server_id = server_keys
+    srv = standalone_server(server_id, verify_signatures=False)
+    try:
+        insecure = Colonies(InProcTransport([srv]), insecure=True)
+        owner_id = Crypto.id(Crypto.prvkey())
+        insecure.add_colony("bench", owner_id, server_prv)
+        env = {
+            "payloadtype": "colonystats",
+            "payload": '{"colonyname":"bench"}',
+            "identity": owner_id,  # bare claim, no signature
+        }
+        resp = srv.handle(env, external=True)
+        assert resp.get("status") == 403 and "signature" in resp["error"]
+        # the same envelope is fine on the in-process path
+        assert "result" in srv.handle(env)
+    finally:
+        srv.stop()
