@@ -5,8 +5,8 @@ from __future__ import annotations
 import time
 
 from repro.core import Colonies, Crypto, ExecutorBase, FunctionSpec, InProcTransport
-from repro.core.cluster import standalone_server
-from repro.core.raft import SimRaftCluster
+from repro.core.cluster import HAColonyCluster, standalone_server
+from repro.core.raft import SimRaftCluster, ThreadedRaftCluster
 
 from .common import Row, timeit
 
@@ -82,3 +82,70 @@ def run() -> None:
         sim.step()
     us = (time.perf_counter() - t0) / n * 1e6
     Row.add("raft_replicated_propose", us, f"{1e6 / us:.0f} entries/s (wallclock)")
+
+    # --- commit wakeup: condition-variable wait vs poll loop --------------
+    # propose_and_wait parks on the node's commit_cv (notified from
+    # _apply_committed); before PR 8 it polled last_applied on a
+    # tick_ms/2 sleep loop. Measure both against the same live cluster
+    # (the poll variant re-implements the old loop inline at its exact
+    # sleep interval). tick_ms=1 so commit latency doesn't quantize both
+    # variants to the same tick boundary.
+    cluster = ThreadedRaftCluster(3, seed=13, tick_ms=1)
+    cluster.start()
+    try:
+        deadline = time.time() + 10
+        leader = None
+        while time.time() < deadline and leader is None:
+            leader = cluster.leader_id()
+            time.sleep(0.02)
+        assert leader is not None
+        node = cluster.nodes[leader]
+
+        def propose_cv() -> None:
+            cluster.propose_and_wait(leader, {"op": "noop"})
+
+        def propose_poll() -> None:
+            with cluster._lock:
+                idx = node.propose({"op": "noop"})
+            assert idx is not None
+            while node.last_applied < idx:
+                time.sleep(cluster.tick_ms / 2000.0)
+
+        us_poll = timeit(propose_poll, 30)
+        us_cv = timeit(propose_cv, 30)
+        Row.add("raft_commit_wait_poll", us_poll, "pre-PR8 sleep-poll loop")
+        Row.add("raft_commit_wait_cv", us_cv,
+                f"{us_poll / us_cv:.2f}x vs poll; wakes on notify, 0 poll"
+                " wakeups")
+    finally:
+        cluster.stop()
+
+    # --- HA assign latency end-to-end (raft-serialized broker op) ---------
+    ha = HAColonyCluster(Crypto.id(server_prv), replicas=3,
+                         verify_signatures=False, seed=14)
+    ha.start(failsafe_interval=5.0)
+    try:
+        assert ha.wait_for_leader(10)
+        hclient = Colonies(InProcTransport(ha.servers), insecure=True)
+        hclient.add_colony("habench", Crypto.id(colony_prv), server_prv)
+        hex_ = ExecutorBase(hclient, "habench", "ha-w", "worker",
+                            colony_prvkey=colony_prv)
+        n = 30
+        for _ in range(n):
+            hclient.submit(
+                FunctionSpec.from_dict({
+                    "conditions": {"colonyname": "habench",
+                                   "executortype": "worker"},
+                    "funcname": "echo", "maxexectime": 3600,
+                }),
+                colony_prv,
+            )
+        t0 = time.perf_counter()
+        for _ in range(n):
+            pd = hclient.assign("habench", 5.0, hex_.prvkey)
+            hclient.close(pd["processid"], [], hex_.prvkey)
+        us = (time.perf_counter() - t0) / (2 * n) * 1e6
+        Row.add("ha_assign_close_op", us,
+                "per raft-serialized broker op, 3 replicas")
+    finally:
+        ha.stop()

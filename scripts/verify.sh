@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# CI entry point: concurrency lint + tier-1 quick suite + lock-order
-# detector stress run + the broker and CFS hot-path benchmarks.
+# CI entry point: the three contract planes (concurrency, authorization,
+# replication — static lints, matrix drift gates, runtime detectors) +
+# tier-1 quick suite + the broker and CFS hot-path benchmarks.
 #
 #   scripts/verify.sh          # quick suite (skips @slow compile tests)
 #   scripts/verify.sh --full   # everything, including @slow
@@ -19,6 +20,13 @@ python -m repro.analysis.lint
 python -m repro.analysis.authlint
 python -m repro.analysis.authmap --check
 
+# Static replication lint + replicated-op matrix drift gate (see
+# REPLICATION.md): the apply cone of every replicated op must be
+# deterministic and CAS-guarded, and the committed matrix must match the
+# REPLICATED_OPS literal.
+python -m repro.analysis.replint
+python -m repro.analysis.replmap --check
+
 if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -q
 else
@@ -29,11 +37,18 @@ fi
 # every lock acquisition is checked for ordering/leaf/cross-shard
 # violations (recorded violations fail the stress assertion).
 REPRO_LOCK_CHECK=1 python -m pytest -q tests/test_concurrency.py \
-    tests/test_http_and_ha.py tests/test_failsafe.py
+    tests/test_http_and_ha.py tests/test_failsafe.py \
+    tests/test_replication.py
 
 # Runtime auth-fact contracts over the full RPC surface: colony-scoped
 # database access inside a handler dispatch raises without a recorded
 # (identity, colony, role) fact.
 REPRO_AUTH_CHECK=1 python -m pytest -q -m "not slow"
+
+# Runtime replication-divergence contracts over the Raft/HA tests:
+# per-node apply journals cross-checked at every index, plus the
+# double-apply idempotence harness on every replicated op.
+REPRO_REPL_CHECK=1 python -m pytest -q tests/test_raft.py \
+    tests/test_http_and_ha.py tests/test_replication.py
 
 python -m benchmarks.run broker cfs

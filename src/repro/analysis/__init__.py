@@ -1,6 +1,7 @@
-"""Concurrency- and authorization-contract analysis for the ColonyOS core.
+"""Concurrency-, authorization-, and replication-contract analysis for
+the ColonyOS core.
 
-Two contract planes, each with a runtime detector and a static lint:
+Three contract planes, each with a runtime detector and a static lint:
 
 Concurrency (see CONCURRENCY.md):
 
@@ -32,6 +33,21 @@ Authorization (see SECURITY.md):
 * :mod:`repro.analysis.authmap` — ``python -m repro.analysis.authmap``,
   which generates the payloadtype → required-role permission matrix in
   SECURITY.md (``--check`` gates drift in CI).
+
+Replication (see REPLICATION.md):
+
+* :mod:`repro.analysis.statehash` — runtime divergence contracts behind
+  ``REPRO_REPL_CHECK=1``: incremental per-colony state digests, chained
+  per-node apply journals cross-checked at each Raft index
+  (:class:`ReplicationDivergenceError` on the first disagreement), and
+  the double-apply idempotence harness in ``HAColonyCluster._apply``.
+* :mod:`repro.analysis.replint` — ``python -m repro.analysis.replint``,
+  a stdlib-``ast`` interprocedural pass proving the apply cone of every
+  replicated op deterministic and CAS-guarded (REP001–REP005).
+* :mod:`repro.analysis.replmap` — ``python -m repro.analysis.replmap``,
+  which generates the replicated-op matrix (op → required fields,
+  leader-stamped fields, CAS guard) in REPLICATION.md (``--check``
+  gates drift in CI).
 """
 
 from .authtrack import AuthContractError, requires_auth
@@ -47,11 +63,25 @@ from .locktrack import (
     set_hold_warn_ms,
     violations,
 )
+from .statehash import (
+    ClusterJournal,
+    ColonyDigest,
+    ReplicationDivergenceError,
+    entry_digest,
+    full_colony_digest,
+    process_state_tuple,
+)
 
 __all__ = [
     "AuthContractError",
+    "ClusterJournal",
+    "ColonyDigest",
     "LockContractError",
+    "ReplicationDivergenceError",
     "TrackedRLock",
+    "entry_digest",
+    "full_colony_digest",
+    "process_state_tuple",
     "enable",
     "hold_stats",
     "hold_warnings",

@@ -25,7 +25,8 @@ locks. This module makes that order machine-checked:
     acquire the same families in opposite orders;
   - **wait-under-lock** — a ``Condition`` built on a tracked lock started
     waiting while the thread still held other tracked locks (blocking
-    while holding a shared lock starves every other acquirer).
+    while holding a shared lock starves every other acquirer), unless
+    the pairing is declared deadlock-free via :func:`allow_wait`.
 
 Violations are *recorded*, not raised (raising mid-acquisition would
 corrupt unrelated state); tests and CI assert :func:`violations` is
@@ -64,6 +65,28 @@ LEAF_FAMILIES = frozenset({"glock"})
 EXCLUSIVE_FAMILIES = frozenset(
     {"glock", "shard", "cfs", "sqlite", "dbcolony", "assignlocal", "raft"}
 )
+
+# Declared wait-under-lock allowances: condition family -> families that
+# may stay held across a wait on it. Empty by default; a caller that
+# proves the pairing deadlock-free (the notifier never acquires the held
+# family) registers it via :func:`allow_wait` next to the wait site.
+_WAIT_ALLOWED: dict[str, frozenset[str]] = {}
+
+
+def allow_wait(cond_family: str, *holding: str) -> None:
+    """Declare a condition wait on ``cond_family`` safe while holding
+    locks from ``holding`` families.
+
+    Wait-under-lock is a violation because the parked thread blocks
+    every acquirer of what it still holds — *and* deadlocks if the
+    notifier needs one of those locks. An allowance is a contract that
+    neither applies: register it at the wait site with a comment proving
+    the notifying thread never touches the held family. Any held lock
+    outside the declared families still fires.
+    """
+    _WAIT_ALLOWED[cond_family] = _WAIT_ALLOWED.get(
+        cond_family, frozenset()
+    ) | frozenset(holding)
 
 
 class _Registry:
@@ -304,7 +327,12 @@ class TrackedRLock:
         # thread parks with this lock released — anything *else* still
         # held blocks every other acquirer for the whole wait.
         if _REG.enabled:
-            others = [lk.name for lk in _held() if lk is not self]
+            allowed = _WAIT_ALLOWED.get(self.family, frozenset())
+            others = [
+                lk.name
+                for lk in _held()
+                if lk is not self and lk.family not in allowed
+            ]
             if others:
                 _record(
                     "wait-under-lock",

@@ -151,6 +151,17 @@ class Database:
         """Per-colony critical-section lock, shared by all replicas on this db."""
         raise NotImplementedError
 
+    def replica_state(self, colony: str) -> list[tuple]:
+        """Replication-visible rows of one colony, for digest cross-checks.
+
+        One tuple per process, matching
+        :func:`repro.analysis.statehash.process_state_tuple`: (processid,
+        state, assignedexecutorid, retries, wait_for_parents, queue_ready,
+        starttime_ns, endtime_ns). Order is unspecified — the digest fold
+        is order-independent.
+        """
+        raise NotImplementedError
+
     # -- CFS metadata plane (fs.py; paper §3.4.5) ---------------------------
     # Indexed per colony so no operation ever scans the whole file table:
     # label trees answer subtree listings, (label, name) revision heads
@@ -764,6 +775,13 @@ class MemoryDatabase(Database):
         s = self._shard(colony)
         with s.lock:
             return {state: n for state, n in s.counters.items() if n}
+
+    def replica_state(self, colony: str) -> list[tuple]:
+        from ..analysis.statehash import process_state_tuple
+
+        s = self._shard(colony)
+        with s.lock:
+            return [process_state_tuple(p) for p in s.procs.values()]
 
     # -- CFS metadata -------------------------------------------------------
     @staticmethod
@@ -1619,6 +1637,15 @@ class SqliteDatabase(Database):
                 (colony,),
             ).fetchall()
             return {r[0]: r[1] for r in rows}
+
+    def replica_state(self, colony: str) -> list[tuple]:
+        from ..analysis.statehash import process_state_tuple
+
+        with self._lock:
+            rows = self._exec(
+                "SELECT body FROM processes WHERE colonyname=?", (colony,)
+            ).fetchall()
+            return [process_state_tuple(Process.from_json(r[0])) for r in rows]
 
     def requeue(self, p: Process) -> None:  # row update already re-queues in SQL
         pass

@@ -18,11 +18,28 @@ from __future__ import annotations
 
 import random
 import threading
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from ..analysis import statehash
 from ..analysis.contracts import no_locks_held
-from ..analysis.locktrack import make_lock
+from ..analysis.locktrack import allow_wait, make_lock
+
+# propose_and_wait parks on a node's commit_cv (built on the raft lock)
+# while the HA assign path still holds the leader-local assignlocal lock
+# — the one hold its contract permits. Deadlock-free: commit_cv is
+# notified from the event-loop thread (_apply_committed / _step_down),
+# which never acquires assignlocal; the parked hold only serializes
+# same-colony assigns, which is assignlocal's whole job.
+allow_wait("raft", "assignlocal")
+
+
+def _node_seed(node_id: str) -> int:
+    """Deterministic per-node RNG seed. ``hash(str)`` is salted per
+    process (PYTHONHASHSEED), so two identically-configured runs would
+    draw different election jitter; CRC32 is stable everywhere."""
+    return zlib.crc32(node_id.encode("utf-8"))
 
 FOLLOWER = "follower"
 CANDIDATE = "candidate"
@@ -61,7 +78,7 @@ class RaftNode:
         self.peers = [p for p in peers if p != node_id]
         self._send = send
         self.apply_fn = apply_fn or (lambda e, i: None)
-        self.rng = rng or random.Random(hash(node_id) & 0xFFFF)
+        self.rng = rng or random.Random(_node_seed(node_id))
         self.election_timeout_ms = election_timeout_ms
         self.heartbeat_ms = heartbeat_ms
 
@@ -83,6 +100,10 @@ class RaftNode:
         self._timeout_ms = self._new_timeout()
         self._peer_contact_ms: dict[str, int] = {}
         self.lock = make_lock(f"raft:{node_id}")
+        # Notified on every commit apply and on step-down, so a
+        # propose_and_wait parks here instead of polling (see
+        # ThreadedRaftCluster.propose_and_wait).
+        self.commit_cv = threading.Condition(self.lock)
 
     # ------------------------------------------------------------------ util
     def _new_timeout(self) -> int:
@@ -159,6 +180,9 @@ class RaftNode:
         self.voted_for = None
         self._votes = set()
         self._timeout_ms = self._new_timeout()
+        # Wake proposers parked on the commit condition: their entry can
+        # no longer commit through this node (lost-leadership recheck).
+        self.commit_cv.notify_all()
 
     # -------------------------------------------------------------- messages
     def receive(self, msg: Msg, now_ms: int) -> None:
@@ -292,9 +316,13 @@ class RaftNode:
                 break
 
     def _apply_committed(self) -> None:
+        applied = False
         while self.last_applied < self.commit_index:
             self.last_applied += 1
             self.apply_fn(self.log[self.last_applied].entry, self.last_applied)
+            applied = True
+        if applied:
+            self.commit_cv.notify_all()
 
     def _broadcast_append(self, now_ms: int) -> None:
         self._last_heartbeat_ms = now_ms
@@ -394,7 +422,11 @@ class SimRaftCluster:
         for nid in ids:
             fn = (lambda nid_: lambda e, i: apply_fn and apply_fn(nid_, e, i))(nid)
             self.nodes[nid] = RaftNode(
-                nid, ids, self.net.send, fn, rng=random.Random(seed + hash(nid) % 1000)
+                nid,
+                ids,
+                self.net.send,
+                fn,
+                rng=random.Random(seed * 100003 + _node_seed(nid)),
             )
         self.now_ms = 0
 
@@ -443,10 +475,29 @@ class ThreadedRaftCluster:
     def __init__(
         self,
         n: int,
-        apply_fn: Callable[[str, dict, int], None] | None = None,
+        apply_fn: Callable[[str, dict, int], Any] | None = None,
         seed: int = 0,
         tick_ms: int = 10,
     ) -> None:
+        # Under REPRO_REPL_CHECK=1 every apply is journaled as
+        # (index, chained digest) per node and cross-checked — the first
+        # index at which replicas disagree records a
+        # ReplicationDivergenceError (re-raised by propose_and_wait and
+        # check_divergence). apply_fn may return an effect digest
+        # (HAColonyCluster._apply does); it is folded into the chain.
+        self.journal: statehash.ClusterJournal | None = None
+        if statehash.is_enabled() and apply_fn is not None:
+            self.journal = statehash.ClusterJournal()
+            inner = apply_fn
+
+            def journaled(nid: str, entry: dict, index: int) -> Any:
+                effect = inner(nid, entry, index)
+                self.journal.record(
+                    nid, index, entry, effect if isinstance(effect, str) else None
+                )
+                return effect
+
+            apply_fn = journaled
         self.sim = SimRaftCluster(n, apply_fn, seed)
         self.tick_ms = tick_ms
         self._stop = threading.Event()
@@ -475,6 +526,11 @@ class ThreadedRaftCluster:
     def propose_and_wait(self, nid: str, entry: dict, timeout: float = 5.0) -> int:
         """Propose on node nid; block until that node has applied the entry.
 
+        The waiter parks on the node's ``commit_cv`` — notified from
+        ``_apply_committed`` after each batch of applies and from
+        ``_step_down`` when leadership is lost — so commit latency is one
+        notification away instead of a ``tick_ms/2`` polling round-trip.
+
         Contract: never entered holding a database lock — the commit is
         applied on the event-loop thread, which needs those same locks
         (the PR-1 deadlock). The leader-local ``assignlocal`` lock is the
@@ -490,19 +546,28 @@ class ThreadedRaftCluster:
 
             raise NotLeaderError("propose on non-leader", leader=node.leader_hint)
         deadline = _time.time() + timeout
-        while _time.time() < deadline:
-            with node.lock:
-                if node.last_applied >= idx:
-                    return idx
-                still_leader = node.state == LEADER
-            if not still_leader:
-                from .errors import NotLeaderError
+        with node.commit_cv:
+            while node.last_applied < idx:
+                if node.state != LEADER:
+                    from .errors import NotLeaderError
 
-                raise NotLeaderError("lost leadership before commit")
-            _time.sleep(self.tick_ms / 2000.0)
-        from .errors import TimeoutError_
+                    raise NotLeaderError("lost leadership before commit")
+                remaining = deadline - _time.time()
+                if remaining <= 0:
+                    from .errors import TimeoutError_
 
-        raise TimeoutError_("raft commit timeout")
+                    raise TimeoutError_("raft commit timeout")
+                # Bounded wait as a belt-and-braces recheck; the CV is
+                # notified on both commit and step-down, so this timeout
+                # almost never expires.
+                node.commit_cv.wait(timeout=min(remaining, 0.25))
+        self.check_divergence()
+        return idx
+
+    def check_divergence(self) -> None:
+        """Raise the first recorded replica divergence (REPRO_REPL_CHECK)."""
+        if self.journal is not None:
+            self.journal.check()
 
     def leader_id(self) -> str | None:
         with self._lock:

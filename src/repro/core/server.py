@@ -56,6 +56,7 @@ from .process import (
     Colony,
     Executor,
     Process,
+    new_id,
     now_ns,
 )
 from .security import open_envelope
@@ -129,10 +130,14 @@ class ColoniesServer:
         }
         # Extension points (cron/generator/fs register their handlers here).
         self.extensions: list[Any] = []
-        # HA hooks — standalone servers are always leader.
+        # HA hooks — standalone servers are always leader. ``_propose_op``
+        # serializes replicated ops (assign, close) through the Raft log;
+        # every proposed entry carries a leader-stamped ``ts`` and a
+        # stable ``opid`` so the apply is deterministic and replay-safe
+        # (see REPLICATION.md, repro.analysis.replint).
         self._ha = False
         self._is_leader: Callable[[], bool] = lambda: True
-        self._propose_assign: Callable[[dict], None] | None = None
+        self._propose_op: Callable[[dict], None] | None = None
         self._stop = threading.Event()
         self._failsafe_thread: threading.Thread | None = None
 
@@ -380,7 +385,7 @@ class ColoniesServer:
             return lk
 
     def _try_assign_once(self, colony: str, ex: Executor) -> Process | None:
-        if self._propose_assign is not None:
+        if self._propose_op is not None:
             # HA: leader-local serialization; Raft log order plus the
             # WAITING CAS in apply_assign make assignment exactly-once.
             lock = self._local_assign_lock(colony)
@@ -389,19 +394,23 @@ class ColoniesServer:
         with lock:
             cands = self.db.candidates(colony, ex.executortype, ex.executorname)
             for p in cands:
+                # Leader-stamped entry: the wall clock and the op identity
+                # are fixed HERE, before the Raft log, so the apply cone
+                # stays deterministic (replint REP001/REP004).
                 op = {
                     "op": "assign",
+                    "opid": new_id(),
                     "processid": p.processid,
                     "executorid": ex.executorid,
                     "ts": now_ns(),
                 }
-                if self._propose_assign is not None:
+                if self._propose_op is not None:
                     # HA path: serialize through the Raft log before applying.
                     # The apply's WAITING CAS may lose (failsafe expiry,
                     # leader churn) and the cluster swallows that conflict —
                     # so confirm this op actually won before handing the
                     # process to the executor.
-                    self._propose_assign(op)
+                    self._propose_op(op)
                     assigned = self.db.get_process(p.processid)
                     if (
                         assigned.state != RUNNING
@@ -452,13 +461,52 @@ class ColoniesServer:
             # e.g. the failsafe already reset this process (paper §4.1:
             # "The previous executor then receives an error").
             raise ConflictError("process is not assigned to this executor")
-        succeeded = bool(payload.get("successful", True))
-        output = payload.get("out", [])
-        errors = payload.get("errors", [])
-        # The authoritative ownership check happens again inside
-        # close_process, under the colony lock (close/failsafe race).
-        self.close_process(p, succeeded, output, errors, ex.executorid)
+        # Leader-stamped entry (REP001/REP004): the end timestamp is fixed
+        # before the Raft log so close replays identically on every replica.
+        op = {
+            "op": "close",
+            "opid": new_id(),
+            "processid": pid,
+            "executorid": ex.executorid,
+            "successful": bool(payload.get("successful", True)),
+            "out": payload.get("out", []),
+            "errors": payload.get("errors", []),
+            "ts": now_ns(),
+        }
+        if self._propose_op is not None:
+            # HA path: serialize close through the Raft log. The apply's
+            # RUNNING + owner CAS may lose (failsafe reset interleaving)
+            # and the cluster swallows that conflict — confirm this close
+            # actually won by checking the leader-stamped end time landed.
+            self._propose_op(op)
+            closed = self.db.get_process(pid)
+            if (
+                closed.state not in (SUCCESSFUL, FAILED)
+                or closed.endtime_ns != op["ts"]
+            ):
+                raise ConflictError("process is not assigned to this executor")
+        else:
+            self.apply_close(op)
         return self.db.get_process(pid).to_dict()
+
+    @requires_auth("executor")
+    def apply_close(self, op: dict) -> None:
+        """State-machine apply for a close op (also invoked by Raft commit).
+
+        Deterministic by construction: the wall clock arrives leader-stamped
+        as ``op["ts"]`` and the RUNNING + owner CAS inside ``close_process``
+        turns a Raft replay into a clean ConflictError instead of a double
+        mutation.
+        """
+        p = self.db.get_process(op["processid"])
+        self.close_process(
+            p,
+            bool(op.get("successful", True)),
+            op.get("out", []),
+            op.get("errors", []),
+            op["executorid"],
+            ts=op["ts"],
+        )
 
     @requires_auth("executor")
     def close_process(
@@ -468,6 +516,8 @@ class ColoniesServer:
         output: list[Any],
         errors: list[str],
         expected_executorid: str | None = None,
+        *,
+        ts: int,
     ) -> None:
         """Close + stateless DAG propagation (paper §3.4.2).
 
@@ -477,6 +527,11 @@ class ColoniesServer:
         that interleaved after the caller's precheck turns this into a
         clean ConflictError instead of silently overwriting a re-queued
         or re-assigned process.
+
+        ``ts`` is the leader-stamped end time from the replicated close
+        entry — reading the wall clock inside this mutation would make
+        the apply nondeterministic across replicas (replint REP001), so
+        it is required, never defaulted.
         """
         released: list[tuple[str, str]] = []
         with self.db.colony_lock(p.colonyname):
@@ -489,7 +544,7 @@ class ColoniesServer:
             ):
                 raise ConflictError("process is not assigned to this executor")
             fresh.state = SUCCESSFUL if succeeded else FAILED
-            fresh.endtime_ns = now_ns()
+            fresh.endtime_ns = ts
             fresh.output = list(output)
             fresh.errors = list(errors)
             fresh.deadline_ns = 0
@@ -501,7 +556,9 @@ class ColoniesServer:
                         released.append(self._queue_key(child))
             else:
                 # Fail descendants so workflows terminate instead of hanging.
-                self._fail_descendants(fresh, f"parent process {fresh.processid} failed")
+                self._fail_descendants(
+                    fresh, f"parent process {fresh.processid} failed", ts
+                )
         if released:
             self._notify_queue(released)
 
@@ -518,15 +575,18 @@ class ColoniesServer:
             self.db.requeue(child)
         return child
 
-    def _fail_descendants(self, p: Process, reason: str) -> None:
+    def _fail_descendants(self, p: Process, reason: str, ts: int) -> None:
+        # ``ts`` is the leader-stamped (or failsafe-scan) timestamp of the
+        # triggering mutation — descendants inherit it so the whole cascade
+        # is deterministic under Raft replay (replint REP001).
         for child_id in p.children:
             child = self.db.get_process(child_id)
             if child.state in (WAITING, RUNNING):
                 child.state = FAILED
-                child.endtime_ns = now_ns()
+                child.endtime_ns = ts
                 child.errors = [reason]
                 self.db.update_process(child)
-                self._fail_descendants(child, reason)
+                self._fail_descendants(child, reason, ts)
 
     # -- dynamic children (MapReduce on the fly, paper §3.4.2) ----------------
     def _h_add_child(self, identity: str, payload: dict) -> dict:
@@ -618,7 +678,7 @@ class ColoniesServer:
                     ]
                     self.db.update_process(cur)
                     self._fail_descendants(
-                        cur, f"parent process {cur.processid} failed"
+                        cur, f"parent process {cur.processid} failed", ts
                     )
                     failed += 1
                 else:
@@ -650,7 +710,9 @@ class ColoniesServer:
                 cur.endtime_ns = ts
                 cur.errors = cur.errors + ["maxwaittime exceeded"]
                 self.db.update_process(cur)
-                self._fail_descendants(cur, f"parent process {cur.processid} failed")
+                self._fail_descendants(
+                    cur, f"parent process {cur.processid} failed", ts
+                )
                 expired += 1
         if woken:
             self._notify_queue(woken)
@@ -706,5 +768,13 @@ class ColoniesServer:
         self._ha = True
         self._is_leader = fn
 
-    def set_assign_proposer(self, fn: Callable[[dict], None]) -> None:
-        self._propose_assign = fn
+    def set_op_proposer(self, fn: Callable[[dict], None]) -> None:
+        """Route replicated ops (assign, close, …) through the Raft log.
+
+        The callable must block until the entry is committed and applied
+        locally (``ThreadedRaftCluster.propose_and_wait`` semantics).
+        """
+        self._propose_op = fn
+
+    # Back-compat: PR 1 named the hook after its only op at the time.
+    set_assign_proposer = set_op_proposer

@@ -88,6 +88,25 @@ def test_detector_catches_wait_under_lock(tracking):
     assert "wait-under-lock" in _kinds()
 
 
+def test_declared_wait_allowance_suppresses_only_that_pairing(tracking):
+    """allow_wait("raft", "assignlocal") (raft.py) lets propose_and_wait
+    park on commit_cv under the leader-local assign lock; any other held
+    family still fires."""
+    import repro.core.raft  # noqa: F401  — registers the allowance
+
+    allowed = locktrack.TrackedRLock("assignlocal:dev")
+    cv = threading.Condition(locktrack.make_lock("raft:n0"))
+    with allowed:
+        with cv:
+            cv.wait(timeout=0.01)
+    assert "wait-under-lock" not in _kinds()
+    other = locktrack.TrackedRLock("shard:dev")
+    with other:
+        with cv:
+            cv.wait(timeout=0.01)
+    assert "wait-under-lock" in _kinds()
+
+
 def test_reentrant_acquire_is_not_a_violation(tracking):
     s = locktrack.TrackedRLock("shard:re")
     with s:

@@ -1,0 +1,460 @@
+"""Replication-safety plane: replint rules, digests, journals, and the
+HA divergence contracts under REPRO_REPL_CHECK=1 (see REPLICATION.md)."""
+
+import time
+
+import pytest
+
+from repro.analysis import statehash
+from repro.analysis.replint import collect_ops, lint_source, run as replint_run
+from repro.analysis.statehash import (
+    ClusterJournal,
+    ColonyDigest,
+    ReplicationDivergenceError,
+    full_colony_digest,
+)
+from repro.core import Colonies, ExecutorBase, FunctionSpec, InProcTransport
+from repro.core.cluster import REPLICATED_OPS, HAColonyCluster
+from repro.core.errors import ConflictError
+from repro.core.process import new_id, now_ns
+from repro.core.raft import RaftNode, ThreadedRaftCluster
+
+
+def spec(**kw):
+    d = {"conditions": {"colonyname": "dev", "executortype": "worker"},
+         "funcname": "echo", "maxexectime": 60}
+    d.update(kw)
+    return FunctionSpec.from_dict(d)
+
+
+@pytest.fixture()
+def repl_check():
+    """REPRO_REPL_CHECK on for the test, restored afterwards."""
+    prev = statehash.is_enabled()
+    statehash.enable(True)
+    yield
+    statehash.enable(prev)
+
+
+# ---------------------------------------------------------------------------
+# replint: every rule fires on a seeded fixture; the real repo is clean
+# ---------------------------------------------------------------------------
+
+
+def _rules(src):
+    return {v.rule for v in lint_source(src, "fixture.py")}
+
+
+def test_rep001_nondeterministic_call_fires_interprocedurally():
+    src = '''
+import time
+class C:
+    def _apply(self, nid, entry, index):
+        self.helper(entry)
+    def helper(self, entry):
+        return time.time()
+'''
+    assert "REP001" in _rules(src)
+
+
+def test_rep001_repo_wrappers_fire():
+    src = '''
+class C:
+    def _apply(self, nid, entry, index):
+        entry["ts"] = now_ns()
+        entry["opid"] = new_id()
+'''
+    vs = [v for v in lint_source(src, "f.py") if v.rule == "REP001"]
+    assert len(vs) == 2
+
+
+def test_rep002_unordered_iteration_into_db_write_fires():
+    src = '''
+class C:
+    def _apply(self, nid, entry, index):
+        for k, v in self.index.items():
+            self.db.update_process(v)
+'''
+    assert "REP002" in _rules(src)
+
+
+def test_rep002_sorted_iteration_is_clean():
+    src = '''
+class C:
+    def _apply(self, nid, entry, index):
+        for k, v in sorted(self.index.items()):
+            self.db.update_process(v)
+'''
+    assert "REP002" not in _rules(src)
+
+
+def test_rep003_unguarded_mutation_fires():
+    src = '''
+class C:
+    def _apply(self, nid, entry, index):
+        p = self.db.get_process(entry["processid"])
+        self.db.update_process(p)
+'''
+    assert "REP003" in _rules(src)
+
+
+def test_rep003_cas_under_colony_lock_is_clean():
+    src = '''
+class C:
+    def _apply(self, nid, entry, index):
+        with self.db.colony_lock("dev"):
+            p = self.db.get_process(entry["processid"])
+            if p.state != "waiting":
+                raise ConflictError("gone")
+            self.db.update_process(p)
+'''
+    assert "REP003" not in _rules(src)
+
+
+def test_rep004_unstamped_propose_fires_and_forwarding_is_exempt():
+    bad = '''
+class C:
+    def go(self):
+        self.raft.propose_and_wait("n0", {"op": "assign", "processid": "p"})
+'''
+    vs = [v for v in lint_source(bad, "f.py") if v.rule == "REP004"]
+    assert len(vs) == 1 and "opid" in vs[0].msg and "ts" in vs[0].msg
+    forwarding = '''
+class C:
+    def forward(self, entry):
+        self.raft.propose_and_wait("n0", entry)
+'''
+    assert "REP004" not in _rules(forwarding)
+
+
+def test_rep005_environment_dependence_fires():
+    env = '''
+import os
+class C:
+    def _apply(self, nid, entry, index):
+        return os.environ["HOME"]
+'''
+    io = '''
+class C:
+    def _apply(self, nid, entry, index):
+        with open("/tmp/x") as f:
+            return f.read()
+'''
+    assert "REP005" in _rules(env)
+    assert "REP005" in _rules(io)
+
+
+def test_repo_lints_clean_with_real_apply_cone():
+    nfiles, cone, vs = replint_run(["src/repro"])
+    assert vs == [], [str(v) for v in vs]
+    assert nfiles > 50
+    # The cone is rooted at the real replicated ops and spans the close
+    # cascade — spot-check the load-bearing members.
+    for member in (
+        "HAColonyCluster._apply",
+        "ColoniesServer.apply_assign",
+        "ColoniesServer.apply_close",
+        "ColoniesServer.close_process",
+        "ColoniesServer._fail_descendants",
+    ):
+        assert member in cone, member
+
+
+def test_replicated_ops_literal_matches_server_api():
+    assert set(REPLICATED_OPS) == {"assign", "close"}
+    for op, op_spec in REPLICATED_OPS.items():
+        assert {"ts", "opid"} <= set(op_spec["required"])
+        assert set(op_spec["leader_stamped"]) == {"opid", "ts"}
+    # collect_ops (what replmap renders) parses the same literal.
+    with open("src/repro/core/cluster.py", encoding="utf-8") as fh:
+        parsed = collect_ops([("cluster.py", fh.read())])
+    assert parsed == REPLICATED_OPS
+
+
+def test_replmap_matches_committed_doc():
+    from repro.analysis.replmap import _split, generate
+
+    with open("REPLICATION.md", encoding="utf-8") as fh:
+        _head, section, _tail = _split(fh.read())
+    assert section.strip() == generate(["src/repro"]).strip()
+
+
+# ---------------------------------------------------------------------------
+# statehash: digests and journals
+# ---------------------------------------------------------------------------
+
+
+def test_colony_digest_is_incremental_and_order_independent():
+    rows = [
+        ("p1", "waiting", "", 0, False, True, 0, 0),
+        ("p2", "running", "ex1", 1, False, False, 10, 0),
+        ("p3", "successful", "ex2", 0, False, False, 5, 9),
+    ]
+    fwd, rev = ColonyDigest(), ColonyDigest()
+    for r in rows:
+        fwd.observe(r[0], r)
+    for r in reversed(rows):
+        rev.observe(r[0], r)
+    assert fwd.digest() == rev.digest()
+    # Updating one row replaces its contribution (not XOR-accumulates).
+    fwd.observe("p1", ("p1", "running", "ex9", 0, False, False, 3, 0))
+    rev.observe("p1", ("p1", "running", "ex9", 0, False, False, 3, 0))
+    assert fwd.digest() == rev.digest()
+    # Reverting the update restores the original digest exactly.
+    before = ColonyDigest()
+    for r in rows:
+        before.observe(r[0], r)
+    fwd.observe("p1", rows[0])
+    assert fwd.digest() == before.digest()
+    # forget removes the contribution.
+    fwd.forget("p3")
+    two = ColonyDigest()
+    for r in rows[:2]:
+        two.observe(r[0], r)
+    assert fwd.digest() == two.digest()
+
+
+def test_incremental_digest_matches_full_recompute(colony):
+    client, srv = colony["client"], colony["server"]
+    ex = ExecutorBase(client, "dev", "dg-w", "worker",
+                      colony_prvkey=colony["colony_prv"])
+    pids = [client.submit(spec(), colony["colony_prv"])["processid"]
+            for _ in range(3)]
+    d = ColonyDigest()
+    for item in srv.db.replica_state("dev"):
+        d.observe(item[0], item)
+    assert d.digest() == full_colony_digest(srv.db, "dev")
+    pd = client.assign("dev", 2.0, ex.prvkey)
+    client.close(pd["processid"], ["done"], ex.prvkey)
+    # Incrementally fold only the changed row; must equal a full rescan.
+    for item in srv.db.replica_state("dev"):
+        if item[0] == pd["processid"]:
+            d.observe(item[0], item)
+    assert d.digest() == full_colony_digest(srv.db, "dev")
+    assert len(d) == len(pids)
+
+
+def test_journal_detects_skewed_replica_at_right_index():
+    j = ClusterJournal()
+    entries = [{"op": "assign", "opid": f"o{i}", "ts": i} for i in range(5)]
+    for i, e in enumerate(entries):
+        j.record("n0", i, e, f"effect{i}")
+    # n1 agrees up to index 2, then applies a different effect at 3.
+    for i, e in enumerate(entries):
+        effect = f"effect{i}" if i != 3 else "SKEWED"
+        j.record("n1", i, e, effect)
+    assert j.divergence is not None
+    assert "index 3" in str(j.divergence)
+    with pytest.raises(ReplicationDivergenceError):
+        j.check()
+    # Chaining poisons every later index too: the divergence reported is
+    # still the FIRST one even though index 4 also mismatched.
+    assert "index 4" not in str(j.divergence)
+
+
+def test_journal_divergent_entry_at_same_index_detected():
+    j = ClusterJournal()
+    j.record("n0", 0, {"op": "assign", "opid": "a"}, None)
+    j.record("n1", 0, {"op": "assign", "opid": "b"}, None)
+    with pytest.raises(ReplicationDivergenceError):
+        j.check()
+
+
+def test_journal_identical_replicas_are_clean():
+    j = ClusterJournal()
+    for nid in ("n0", "n1", "n2"):
+        for i in range(10):
+            j.record(nid, i, {"op": "assign", "opid": f"o{i}"}, f"e{i}")
+    j.check()
+    assert j.nodes() == ["n0", "n1", "n2"]
+    assert j.entries("n0") == j.entries("n1") == j.entries("n2")
+
+
+def test_threaded_cluster_cross_checks_node_effects(repl_check):
+    """An apply whose effect depends on which node ran it must trip the
+    journal cross-check on the first shared index."""
+    cluster = ThreadedRaftCluster(3, lambda nid, e, i: f"state-of-{nid}", seed=7)
+    assert cluster.journal is not None
+    cluster.start()
+    try:
+        deadline = time.time() + 10
+        leader = None
+        while time.time() < deadline and leader is None:
+            leader = cluster.leader_id()
+            time.sleep(0.02)
+        assert leader is not None
+        with pytest.raises(ReplicationDivergenceError):
+            while time.time() < deadline:
+                cluster.propose_and_wait(leader, {"op": "x", "n": 1})
+                time.sleep(0.05)
+                cluster.check_divergence()
+            raise AssertionError("divergent applies never detected")
+    finally:
+        cluster.stop()
+
+
+def test_flag_off_means_no_journal():
+    prev = statehash.is_enabled()
+    statehash.enable(False)
+    try:
+        cluster = ThreadedRaftCluster(3, lambda nid, e, i: nid, seed=8)
+        assert cluster.journal is None
+    finally:
+        statehash.enable(prev)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: deterministic RNG seeding + commit condvar
+# ---------------------------------------------------------------------------
+
+
+def test_same_node_id_draws_identical_election_jitter():
+    a = RaftNode("n0", ["n0", "n1", "n2"], send=lambda m: None)
+    b = RaftNode("n0", ["n0", "n1", "n2"], send=lambda m: None)
+    assert [a.rng.randint(150, 300) for _ in range(32)] == [
+        b.rng.randint(150, 300) for _ in range(32)
+    ]
+    # Distinct ids still diverge (different election timing per node).
+    c = RaftNode("n1", ["n0", "n1", "n2"], send=lambda m: None)
+    assert [a.rng.randint(150, 300) for _ in range(32)] != [
+        c.rng.randint(150, 300) for _ in range(32)
+    ]
+
+
+def test_propose_and_wait_wakes_on_commit_not_poll():
+    cluster = ThreadedRaftCluster(3, seed=9)
+    cluster.start()
+    try:
+        deadline = time.time() + 10
+        leader = None
+        while time.time() < deadline and leader is None:
+            leader = cluster.leader_id()
+            time.sleep(0.02)
+        assert leader is not None
+        node = cluster.nodes[leader]
+        idx = cluster.propose_and_wait(leader, {"op": "noop"})
+        assert node.last_applied >= idx
+    finally:
+        cluster.stop()
+
+
+# ---------------------------------------------------------------------------
+# HA end-to-end under REPRO_REPL_CHECK=1
+# ---------------------------------------------------------------------------
+
+
+def _ha_cluster(server_keys, colony_keys, seed):
+    server_prv, server_id = server_keys
+    colony_prv, colony_id = colony_keys
+    cluster = HAColonyCluster(server_id, replicas=3, seed=seed)
+    cluster.start(failsafe_interval=0.2)
+    assert cluster.wait_for_leader(10)
+    client = Colonies(InProcTransport(cluster.servers))
+    client.add_colony("dev", colony_id, server_prv)
+    return cluster, client, colony_prv
+
+
+def test_ha_close_is_replicated_and_replay_safe(repl_check, server_keys, colony_keys):
+    """Close goes through the Raft log with a leader-stamped ts; the
+    double-apply harness verifies its CAS on every entry."""
+    cluster, client, colony_prv = _ha_cluster(server_keys, colony_keys, seed=21)
+    try:
+        ex = ExecutorBase(client, "dev", "cl-w", "worker", colony_prvkey=colony_prv)
+        p = client.submit(spec(), colony_prv)
+        pd = client.assign("dev", 5.0, ex.prvkey)
+        assert pd["processid"] == p["processid"]
+        client.close(p["processid"], ["out"], ex.prvkey)
+        done = client.get_process(p["processid"], colony_prv)
+        assert done["state"] == "successful" and done["out"] == ["out"]
+        assert done["endtime"] > 0
+        # A second close of the same process loses the CAS.
+        with pytest.raises(ConflictError):
+            client.close(p["processid"], ["again"], ex.prvkey)
+        cluster.raft.check_divergence()
+        # Both ops were journaled (assign + close on at least the leader).
+        journal = cluster.raft.journal
+        assert journal is not None
+        lengths = [len(journal.entries(n)) for n in journal.nodes()]
+        assert max(lengths) >= 2
+    finally:
+        cluster.stop()
+
+
+def test_double_apply_harness_catches_non_idempotent_apply(
+    repl_check, server_keys, colony_keys
+):
+    """Strip the CAS out of the assign apply: the digest fixpoint check
+    must record a divergence, surfaced by propose_and_wait."""
+    cluster, client, colony_prv = _ha_cluster(server_keys, colony_keys, seed=22)
+    try:
+        ex = ExecutorBase(client, "dev", "bad-w", "worker", colony_prvkey=colony_prv)
+        p = client.submit(spec(), colony_prv)
+
+        def non_idempotent_apply(op):
+            cur = cluster.db.get_process(op["processid"])
+            cur.retries += 1  # no CAS: every replay mutates again
+            cluster.db.update_process(cur)
+
+        cluster.servers[0].apply_assign = non_idempotent_apply
+        op = {
+            "op": "assign",
+            "opid": new_id(),
+            "processid": p["processid"],
+            "executorid": ex.executorid,
+            "ts": now_ns(),
+        }
+        leader = cluster.raft.leader_id()
+        with pytest.raises(ReplicationDivergenceError) as ei:
+            cluster.raft.propose_and_wait(leader, op)
+            cluster.raft.check_divergence()
+        assert "not idempotent" in str(ei.value)
+    finally:
+        cluster.stop()
+
+
+def test_ha_chaos_failover_journals_byte_identical(
+    repl_check, server_keys, colony_keys
+):
+    """Acceptance criterion: 3-replica kill/revive failover under
+    REPRO_REPL_CHECK=1 completes with byte-identical apply journals."""
+    cluster, client, colony_prv = _ha_cluster(server_keys, colony_keys, seed=23)
+    try:
+        ex = ExecutorBase(client, "dev", "chaos-w", "worker",
+                          colony_prvkey=colony_prv)
+        ex.register_function("echo", lambda ctx, *a: list(a))
+        ex.start(poll_timeout=0.3)
+
+        p1 = client.submit(spec(args=[1]), colony_prv)
+        assert client.wait(p1["processid"], colony_prv, timeout=10)[
+            "state"] == "successful"
+
+        lid = cluster.raft.leader_id()
+        cluster.kill_server(int(lid[1:]))
+        p2 = client.submit(spec(args=[2]), colony_prv)
+        assert client.wait(p2["processid"], colony_prv, timeout=20)[
+            "state"] == "successful"
+        cluster.revive_server(int(lid[1:]))
+        p3 = client.submit(spec(args=[3]), colony_prv)
+        assert client.wait(p3["processid"], colony_prv, timeout=20)[
+            "state"] == "successful"
+        ex.stop()
+
+        # Wait for the revived replica to catch up, then compare the
+        # journals byte for byte: every node applied the same entries
+        # with the same effects at every index.
+        journal = cluster.raft.journal
+        assert journal is not None
+        commit = max(n.commit_index for n in cluster.raft.nodes.values())
+        deadline = time.time() + 20
+        while time.time() < deadline:
+            if all(n.last_applied >= commit
+                   for n in cluster.raft.nodes.values()):
+                break
+            time.sleep(0.05)
+        journal.check()
+        entries = [journal.entries(n) for n in sorted(journal.nodes())]
+        assert len(entries) == 3
+        assert entries[0] == entries[1] == entries[2]
+        assert len(entries[0]) >= 6  # ≥3 assigns + ≥3 closes, all replicated
+    finally:
+        cluster.stop()
