@@ -33,11 +33,13 @@ from repro.core.process import FAILED, RUNNING, SUCCESSFUL, WAITING, Process, no
 from .common import Row, timeit
 
 
-def _setup(db, verify: bool):
+def _setup(db, verify: bool, idempotency: bool = True):
     server_prv = Crypto.prvkey()
     colony_prv = Crypto.prvkey()
     srv = standalone_server(Crypto.id(server_prv), db, verify_signatures=verify)
-    client = Colonies(InProcTransport([srv]), insecure=not verify)
+    client = Colonies(
+        InProcTransport([srv]), insecure=not verify, idempotency=idempotency
+    )
     client.add_colony("bench", Crypto.id(colony_prv), server_prv)
     ex = ExecutorBase(client, "bench", "w", "worker", colony_prvkey=colony_prv)
     ex.register_function("echo", lambda ctx, *a: list(a))
@@ -71,6 +73,7 @@ def _fill_queue_mix(db, depth: int) -> None:
 
 
 def run() -> None:
+    cycle_us: dict[tuple[str, str], float] = {}
     for db_name, db_factory in (("memdb", MemoryDatabase), ("sqlite", SqliteDatabase)):
         for verify in (True, False):
             srv, client, colony_prv, ex = _setup(db_factory(), verify)
@@ -82,12 +85,55 @@ def run() -> None:
 
             us = timeit(cycle, n, warmup=2)
             tag = "signed" if verify else "nosig"
+            cycle_us[(db_name, tag)] = us
             Row.add(
                 f"broker_submit_assign_close_{db_name}_{tag}",
                 us,
                 f"{1e6 / us:.0f} proc/s",
             )
             srv.stop()
+
+    # dedup overhead: the exactly-once bookkeeping a keyed RPC adds with
+    # retries idle — msgid generation (client) plus spec lookup, replay
+    # probe (a miss), colony attribution and the marshal reply snapshot
+    # (server). Timed per-operation rather than as an end-to-end A/B: on
+    # a 1-core box the cycle's run-to-run jitter (GC and scheduler) is
+    # ±15%, which swamps a few-µs effect in either direction. The note
+    # relates it to BOTH cycles above: the signed cycle is the
+    # production hot path (zero-trust signatures are mandatory outside
+    # benchmarks — ROBUSTNESS.md bounds the overhead there at <5%, and
+    # it lands orders of magnitude under), while the crypto-free cycle
+    # is the harshest possible denominator.
+    from repro.core import idempotency
+    from repro.core.process import new_id
+
+    for db_name, db_factory in (("memdb", MemoryDatabase), ("sqlite", SqliteDatabase)):
+        srv, client, colony_prv, ex = _setup(db_factory(), False)
+        db = srv.db
+        client.submit(_spec(), colony_prv)
+        reply = client.get_processes("bench", colony_prv)[0]  # realistic size
+        payload = {"spec": _spec().to_dict()}
+        seq = iter(range(10**9))
+
+        def keyed_rpc_extra():
+            m = new_id()
+            idempotency.classify("submitfunctionspec")
+            key = f"id:{m}"
+            db.dedup_get(key)  # miss: the hot (non-replay) path
+            colony = idempotency.reply_colony("submitfunctionspec", payload, reply)
+            db.dedup_put(f"{key}:{next(seq)}", colony, now_ns(), reply)
+
+        us = timeit(keyed_rpc_extra, 500, warmup=20)
+        per_cycle = 3 * us  # submit, assign and close are all keyed
+        pct_signed = 100.0 * per_cycle / cycle_us[(db_name, "signed")]
+        pct_nosig = 100.0 * per_cycle / cycle_us[(db_name, "nosig")]
+        Row.add(
+            f"broker_dedup_overhead_{db_name}",
+            us,
+            f"per keyed RPC; cycle +{pct_signed:.2f}% signed"
+            f" +{pct_nosig:.1f}% nosig",
+        )
+        srv.stop()
 
     # queue-depth scaling: candidate query latency with a deep, mixed
     # backlog (blocked + pinned processes ahead of the runnable head)

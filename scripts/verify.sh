@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# CI entry point: the three contract planes (concurrency, authorization,
-# replication — static lints, matrix drift gates, runtime detectors) +
-# tier-1 quick suite + the broker and CFS hot-path benchmarks.
+# CI entry point: the four contract planes (concurrency, authorization,
+# replication, idempotency — static lints, matrix drift gates, runtime
+# detectors, chaos soak) + tier-1 quick suite + the broker and CFS
+# hot-path benchmarks.
 #
 #   scripts/verify.sh          # quick suite (skips @slow compile tests)
 #   scripts/verify.sh --full   # everything, including @slow
@@ -27,6 +28,12 @@ python -m repro.analysis.authmap --check
 python -m repro.analysis.replint
 python -m repro.analysis.replmap --check
 
+# Static idempotency lint (see ROBUSTNESS.md): every registered
+# payloadtype must be classified in idempotency.SPEC, and the
+# classification must match whether the handler's call cone reaches a
+# database mutator — retried RPCs must not duplicate effects.
+python -m repro.analysis.idemlint
+
 if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -q
 else
@@ -38,7 +45,7 @@ fi
 # violations (recorded violations fail the stress assertion).
 REPRO_LOCK_CHECK=1 python -m pytest -q tests/test_concurrency.py \
     tests/test_http_and_ha.py tests/test_failsafe.py \
-    tests/test_replication.py
+    tests/test_replication.py tests/test_faults.py
 
 # Runtime auth-fact contracts over the full RPC surface: colony-scoped
 # database access inside a handler dispatch raises without a recorded
@@ -50,5 +57,11 @@ REPRO_AUTH_CHECK=1 python -m pytest -q -m "not slow"
 # double-apply idempotence harness on every replicated op.
 REPRO_REPL_CHECK=1 python -m pytest -q tests/test_raft.py \
     tests/test_http_and_ha.py tests/test_replication.py
+
+# Chaos soak gate (see ROBUSTNESS.md): 3-replica HA cluster under a
+# seeded FaultPlan (transport resets/drops) and a ChaosMonkey
+# partitioning raft replicas; every process must reach a terminal state
+# exactly once with zero replication divergence.
+REPRO_REPL_CHECK=1 python -m pytest -q tests/test_chaos_soak.py
 
 python -m benchmarks.run broker cfs

@@ -8,14 +8,18 @@ Public surface:
 from .client import Colonies, InProcTransport
 from .crypto import Crypto
 from .database import Database, MemoryDatabase, SqliteDatabase
+from .errors import TransportError
 from .executor import ExecutorBase, ProcessContext
 from .process import FAILED, RUNNING, SUCCESSFUL, WAITING, Process
+from .retry import RetryPolicy
 from .server import ColoniesServer
 from .spec import Conditions, FunctionSpec, WorkflowSpec
 
 __all__ = [
     "Colonies",
     "InProcTransport",
+    "RetryPolicy",
+    "TransportError",
     "Crypto",
     "Database",
     "MemoryDatabase",

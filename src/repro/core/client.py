@@ -11,6 +11,8 @@ from __future__ import annotations
 import time
 from typing import Any, Callable
 
+from ..runtime import faults
+from . import idempotency
 from .errors import (
     AuthError,
     ColoniesError,
@@ -18,8 +20,11 @@ from .errors import (
     NotFoundError,
     NotLeaderError,
     TimeoutError_,
+    TransportError,
     ValidationError,
 )
+from .process import new_id
+from .retry import RetryPolicy, send_with_retry
 from .security import sign_envelope
 from .spec import FunctionSpec, WorkflowSpec
 
@@ -30,24 +35,46 @@ _ERROR_TYPES: dict[int, type[ColoniesError]] = {
     408: TimeoutError_,
     409: ConflictError,
     421: NotLeaderError,
+    503: TransportError,
 }
 
 
 class InProcTransport:
-    """Direct dispatch to one or more server replicas (follower redirect aware)."""
+    """Direct dispatch to one or more server replicas (follower redirect aware).
 
-    def __init__(self, servers: list) -> None:
+    ``retry=RetryPolicy(...)`` re-runs the replica pass on transport-level
+    failures (503/421) with capped jittered backoff — see retry.py."""
+
+    def __init__(self, servers: list, retry: RetryPolicy | None = None) -> None:
         if not isinstance(servers, list):
             servers = [servers]
         self.servers = servers
+        self.retry = retry
         self._preferred = 0
 
-    def send(self, envelope: dict) -> dict:
+    def send(self, envelope: dict, timeout: float | None = None) -> dict:
+        # timeout is accepted for interface parity with HttpTransport;
+        # in-proc dispatch blocks in the server's own long-poll budget.
+        return send_with_retry(lambda: self._send_once(envelope), self.retry)
+
+    def _send_once(self, envelope: dict) -> dict:
+        ptype = envelope.get("payloadtype", "")
         last: dict = {"error": "no servers", "status": 500}
         order = list(range(len(self.servers)))
         order = order[self._preferred :] + order[: self._preferred]
         for idx in order:
-            resp = self.servers[idx].handle(envelope)
+            try:
+                action = faults.hit("transport.send", payloadtype=ptype)
+                resp = self.servers[idx].handle(envelope)
+                if action == "duplicate":  # at-least-once delivery: send twice
+                    resp = self.servers[idx].handle(envelope)
+                faults.hit("transport.recv", payloadtype=ptype)
+            except ConnectionError as e:
+                # Injected transport faults and server-side crash windows
+                # (FaultInjected is a ConnectionError) look identical to a
+                # dead connection: retryable, reply lost.
+                last = {"error": f"transport: {e}", "status": 503}
+                continue
             if resp.get("status") == 421:  # not leader — try the next replica
                 last = resp
                 continue
@@ -61,20 +88,41 @@ class Colonies:
 
     ``insecure=True`` skips request signing and sends a bare identity claim —
     only honoured by servers running with ``verify_signatures=False``
-    (benchmarking the broker without the crypto term)."""
+    (benchmarking the broker without the crypto term).
 
-    def __init__(self, transport, insecure: bool = False) -> None:
+    ``idempotency=False`` stops stamping mutating envelopes with a msgid
+    (benchmarking the dedup term; retried mutations may then duplicate)."""
+
+    def __init__(
+        self, transport, insecure: bool = False, idempotency: bool = True
+    ) -> None:
         self.transport = transport
         self.insecure = insecure
+        self.idempotency = idempotency
 
     @staticmethod
-    def connect(host: str, port: int) -> "Colonies":
+    def connect(host: str, port: int, retry: RetryPolicy | None = None) -> "Colonies":
         from .http_transport import HttpTransport
 
-        return Colonies(HttpTransport(host, port))
+        return Colonies(HttpTransport(host, port, retry=retry))
 
     # ------------------------------------------------------------------ rpc
-    def _rpc(self, payloadtype: str, payload: dict, prvkey: str) -> Any:
+    def _rpc(
+        self,
+        payloadtype: str,
+        payload: dict,
+        prvkey: str,
+        timeout: float | None = None,
+        msgid: str | None = None,
+    ) -> Any:
+        if (
+            msgid is None
+            and self.idempotency
+            and idempotency.classify(payloadtype) == idempotency.KEYED
+        ):
+            # One key per logical operation: transport retries of this
+            # call all carry the same msgid, so the server dedups them.
+            msgid = new_id()
         if self.insecure:
             from .crypto import Crypto
             from .security import canonical
@@ -84,9 +132,14 @@ class Colonies:
                 "payload": canonical(payload),
                 "identity": Crypto.id(prvkey),
             }
+            if msgid:
+                env["msgid"] = msgid
         else:
-            env = sign_envelope(payloadtype, payload, prvkey)
-        resp = self.transport.send(env)
+            env = sign_envelope(payloadtype, payload, prvkey, msgid=msgid)
+        if timeout is None:
+            resp = self.transport.send(env)
+        else:
+            resp = self.transport.send(env, timeout=timeout)
         if "error" in resp:
             err_cls = _ERROR_TYPES.get(int(resp.get("status", 500)), ColoniesError)
             raise err_cls(resp["error"])
@@ -150,18 +203,34 @@ class Colonies:
             "assign", {"colonyname": colonyname, "timeout": timeout}, executor_prvkey
         )
 
-    def close(self, processid: str, output: list[Any], executor_prvkey: str) -> dict:
+    def close(
+        self,
+        processid: str,
+        output: list[Any],
+        executor_prvkey: str,
+        msgid: str | None = None,
+    ) -> dict:
+        # msgid lets a caller (the executor's pending-close journal) reuse
+        # one idempotency key across its own re-deliveries of this close.
         return self._rpc(
             "close",
             {"processid": processid, "successful": True, "out": list(output)},
             executor_prvkey,
+            msgid=msgid,
         )
 
-    def fail(self, processid: str, errors: list[str], executor_prvkey: str) -> dict:
+    def fail(
+        self,
+        processid: str,
+        errors: list[str],
+        executor_prvkey: str,
+        msgid: str | None = None,
+    ) -> dict:
         return self._rpc(
             "close",
             {"processid": processid, "successful": False, "errors": list(errors)},
             executor_prvkey,
+            msgid=msgid,
         )
 
     def add_child(
@@ -196,14 +265,36 @@ class Colonies:
     def wait(
         self, processid: str, prvkey: str, timeout: float = 30.0, poll: float = 0.05
     ) -> dict:
-        """Poll until a process reaches a terminal state."""
-        deadline = time.time() + timeout
-        while time.time() < deadline:
-            p = self.get_process(processid, prvkey)
-            if p["state"] in ("successful", "failed"):
-                return p
-            time.sleep(poll)
-        raise TimeoutError_(f"process {processid} still not terminal")
+        """Poll until a process reaches a terminal state.
+
+        The overall deadline holds even against a hung transport: each
+        poll gets a per-request timeout derived from the remaining
+        budget, and the timeout error surfaces the last non-timeout
+        failure instead of a generic message."""
+        deadline = time.monotonic() + timeout
+        last_err: ColoniesError | None = None
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                p = self._rpc(
+                    "getprocess",
+                    {"processid": processid},
+                    prvkey,
+                    timeout=max(0.05, remaining),
+                )
+                if p["state"] in ("successful", "failed"):
+                    return p
+            except TimeoutError_:
+                pass  # transient poll expiry; the outer deadline governs
+            except ColoniesError as e:
+                last_err = e
+            time.sleep(max(0.0, min(poll, deadline - time.monotonic())))
+        detail = f" (last error: {last_err})" if last_err is not None else ""
+        raise TimeoutError_(
+            f"process {processid} still not terminal after {timeout}s{detail}"
+        )
 
     # ------------------------------------------------------------------ cron
     def add_cron(self, cron: dict, prvkey: str) -> dict:

@@ -33,8 +33,8 @@ from .server import ColoniesServer
 REPLICATED_OPS: dict[str, dict] = {
     "assign": {
         "apply": "ColoniesServer.apply_assign",
-        "required": ("op", "opid", "processid", "executorid", "ts"),
-        "leader_stamped": ("opid", "ts"),
+        "required": ("op", "opid", "processid", "executorid", "ts", "msgid"),
+        "leader_stamped": ("opid", "ts", "msgid"),
         "cas": "state == WAITING under db.colony_lock",
     },
     "close": {
@@ -48,8 +48,9 @@ REPLICATED_OPS: dict[str, dict] = {
             "out",
             "errors",
             "ts",
+            "msgid",
         ),
-        "leader_stamped": ("opid", "ts"),
+        "leader_stamped": ("opid", "ts", "msgid"),
         "cas": "state == RUNNING and executor ownership under db.colony_lock",
     },
 }

@@ -44,13 +44,16 @@ from __future__ import annotations
 import bisect
 import heapq
 import json
+import marshal
 import sqlite3
 import threading
+from collections import deque
 from typing import Any, Iterable
 
 from ..analysis.authtrack import guard_database_subclass
 from ..analysis.contracts import requires_lock
 from ..analysis.locktrack import make_lock
+from ..runtime import faults
 from .errors import ConflictError, NotFoundError
 from .process import (
     FAILED,
@@ -62,6 +65,13 @@ from .process import (
     Process,
     now_ns,
 )
+
+
+# RPC dedup table bounds (ROBUSTNESS.md): a record only needs to outlive
+# its client's retry window, so entries expire after DEDUP_TTL_NS and each
+# colony keeps at most DEDUP_MAX_PER_COLONY records (oldest evicted first).
+DEDUP_TTL_NS = 600 * 10**9
+DEDUP_MAX_PER_COLONY = 4096
 
 
 class Database:
@@ -149,6 +159,18 @@ class Database:
 
     def colony_lock(self, colony: str) -> threading.RLock:
         """Per-colony critical-section lock, shared by all replicas on this db."""
+        raise NotImplementedError
+
+    # -- RPC dedup table (exactly-once mutating RPCs; ROBUSTNESS.md) --------
+    # Keyed on "identity:msgid". Bounded: TTL-evicted plus a per-colony
+    # record cap, so a retry storm cannot grow the table without limit.
+    # Lives in the shared db so every HA replica dedups identically.
+    def dedup_get(self, key: str) -> dict | None:
+        """Recorded reply for a keyed RPC, or None if never completed."""
+        raise NotImplementedError
+
+    def dedup_put(self, key: str, colony: str, ts: int, reply) -> None:
+        """Record the reply of a completed keyed RPC (successes only)."""
         raise NotImplementedError
 
     def replica_state(self, colony: str) -> list[tuple]:
@@ -381,6 +403,11 @@ class MemoryDatabase(Database):
         # the id-keyed membership check (`_require_member`).
         self._users: dict[str, dict[str, dict]] = {}
         self._user_colony: dict[str, str] = {}
+        # RPC dedup records: key -> (ts, colony, marshal-blob), plus a
+        # per-colony FIFO of keys driving cap/TTL eviction. Both live
+        # under _glock (straight-line dict/deque ops only — leaf lock).
+        self._dedup: dict[str, tuple[int, str, bytes]] = {}
+        self._dedup_fifo: dict[str, deque[str]] = {}
         # Observability for bounded-work regression tests/benchmarks.
         self.metrics: dict[str, int] = {
             "deadline_pops": 0,
@@ -573,6 +600,9 @@ class MemoryDatabase(Database):
 
     # processes
     def add_process(self, p: Process) -> None:
+        # Fault point BEFORE any lock (CONCURRENCY.md: nothing may raise
+        # or sleep under a shard lock that isn't the write itself).
+        faults.hit("db.commit", method="add_process")
         s = self._shard(p.colonyname)
         with s.lock:
             s.procs[p.processid] = p
@@ -595,6 +625,7 @@ class MemoryDatabase(Database):
             return p
 
     def update_process(self, p: Process) -> None:
+        faults.hit("db.commit", method="update_process")
         s = self._shard(p.colonyname)
         with s.lock:
             if p.processid not in s.procs:
@@ -609,6 +640,47 @@ class MemoryDatabase(Database):
         with s.lock:
             self._push_deadlines(s, p)
             self._enqueue(s, p)
+
+    # RPC dedup (exactly-once keyed RPCs; ROBUSTNESS.md). The reply is
+    # snapshotted with ``marshal`` — a flat bytes blob, so (a) a caller
+    # mutating the live result object can never corrupt the record, and
+    # (b) the table is invisible to the cyclic GC. Both alternatives
+    # measured worse on the hot path: storing the object graph by
+    # reference kept thousands of long-lived containers on the gen-2
+    # scan list (a per-cycle GC tax bigger than the marshal dump), and
+    # JSON costs ~3x marshal to encode. Replies are plain JSON-shaped
+    # data (dict/list/str/num/bool/None), exactly marshal's domain.
+    def dedup_get(self, key: str) -> dict | None:
+        with self._glock:
+            rec = self._dedup.get(key)
+            if rec is None:
+                return None
+            ts, _colony, blob = rec
+            if now_ns() - ts > DEDUP_TTL_NS:
+                del self._dedup[key]
+                return None
+        return marshal.loads(blob)
+
+    def dedup_put(self, key: str, colony: str, ts: int, reply) -> None:
+        blob = marshal.dumps(reply)
+        with self._glock:
+            if key not in self._dedup:
+                fifo = self._dedup_fifo.get(colony)
+                if fifo is None:
+                    fifo = self._dedup_fifo[colony] = deque()
+                fifo.append(key)
+                # Amortized eviction: cap overflow plus any expired prefix.
+                while len(fifo) > DEDUP_MAX_PER_COLONY:
+                    self._dedup.pop(fifo.popleft(), None)
+                while fifo:
+                    head = self._dedup.get(fifo[0])
+                    if head is None:
+                        fifo.popleft()
+                    elif ts - head[0] > DEDUP_TTL_NS:
+                        del self._dedup[fifo.popleft()]
+                    else:
+                        break
+            self._dedup[key] = (ts, colony, blob)
 
     @requires_lock("shard")
     def _scan_queue(
@@ -1163,6 +1235,11 @@ CREATE TABLE IF NOT EXISTS kvlist (
     tbl TEXT NOT NULL, key TEXT NOT NULL, seq INTEGER NOT NULL, value TEXT NOT NULL
 );
 CREATE INDEX IF NOT EXISTS idx_kvlist ON kvlist (tbl, key, seq);
+CREATE TABLE IF NOT EXISTS rpc_dedup (
+    key TEXT PRIMARY KEY, colonyname TEXT NOT NULL, ts INTEGER NOT NULL,
+    reply TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_rpc_dedup_colony ON rpc_dedup (colonyname, ts);
 """
 
 
@@ -1185,6 +1262,7 @@ class SqliteDatabase(Database):
     def __init__(self, path: str = ":memory:") -> None:
         self._lock = make_lock("sqlite")
         self._colony_locks: dict[str, threading.RLock] = {}
+        self._dedup_puts = 0  # amortized rpc_dedup eviction counter
         self._conn = sqlite3.connect(path, check_same_thread=False)
         with self._lock:
             self._conn.execute("PRAGMA journal_mode=WAL")
@@ -1550,6 +1628,9 @@ class SqliteDatabase(Database):
         self._conn.commit()
 
     def add_process(self, p: Process) -> None:
+        # Fault point BEFORE the lock: an injected commit failure must not
+        # abandon a held sqlite lock or a half-written transaction.
+        faults.hit("db.commit", method="add_process")
         with self._lock:
             self._write_process(p, insert=True)
 
@@ -1563,6 +1644,7 @@ class SqliteDatabase(Database):
             return Process.from_json(row[0])
 
     def update_process(self, p: Process) -> None:
+        faults.hit("db.commit", method="update_process")
         with self._lock:
             self._write_process(p, insert=False)
 
@@ -1649,6 +1731,45 @@ class SqliteDatabase(Database):
 
     def requeue(self, p: Process) -> None:  # row update already re-queues in SQL
         pass
+
+    # -- RPC dedup (exactly-once keyed RPCs; ROBUSTNESS.md) -----------------
+
+    def dedup_get(self, key: str) -> dict | None:
+        with self._lock:
+            row = self._exec(
+                "SELECT ts, reply FROM rpc_dedup WHERE key=?", (key,)
+            ).fetchone()
+            if row is None or now_ns() - row[0] > DEDUP_TTL_NS:
+                return None
+            return json.loads(row[1])
+
+    def dedup_put(self, key: str, colony: str, ts: int, reply) -> None:
+        with self._lock:
+            self._exec(
+                "INSERT OR REPLACE INTO rpc_dedup VALUES (?,?,?,?)",
+                (key, colony, ts, json.dumps(reply)),
+            )
+            # Amortized eviction (~1/128 puts): expired rows everywhere,
+            # plus cap overflow in this colony via idx_rpc_dedup_colony.
+            self._dedup_puts += 1
+            if self._dedup_puts % 128 == 0:
+                self._exec("DELETE FROM rpc_dedup WHERE ts<?", (ts - DEDUP_TTL_NS,))
+                self._exec(
+                    "DELETE FROM rpc_dedup WHERE key IN ("
+                    " SELECT key FROM rpc_dedup WHERE colonyname=?"
+                    " ORDER BY ts DESC LIMIT -1 OFFSET ?)",
+                    (colony, DEDUP_MAX_PER_COLONY),
+                )
+            # The commit must happen per put: the handler's effect already
+            # committed before this call, so without it this INSERT would
+            # open a fresh write transaction and hold the file's RESERVED
+            # lock indefinitely — any other connection to the same
+            # database (broker restart, a second broker in the paper's
+            # shared-DB model) hits "database is locked". A crash between
+            # the effect commit and this one loses only the dedup record,
+            # which re-executes the op on retry — the same outcome an
+            # unkeyed retry produces (ROBUSTNESS.md).
+            self._conn.commit()
 
     # -- CFS metadata -------------------------------------------------------
 

@@ -45,3 +45,12 @@ class ValidationError(ColoniesError):
     """Malformed function spec / workflow / request payload."""
 
     status = 400
+
+
+class TransportError(ColoniesError):
+    """Request never produced a server reply (refused/reset/timed out).
+
+    The mutation may or may not have committed server-side — safe to
+    retry only because mutating RPCs carry an idempotency key (msgid)."""
+
+    status = 503

@@ -11,12 +11,15 @@ Stdlib only: http.server + urllib.
 
 from __future__ import annotations
 
+import http.client
 import json
 import threading
 import urllib.error
 import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
+from ..runtime import faults
+from .retry import RetryPolicy, send_with_retry
 from .server import ColoniesServer
 
 
@@ -40,7 +43,17 @@ class _Handler(BaseHTTPRequestHandler):
         # external=True: envelopes that crossed the network are always
         # signature-verified, even on servers built with
         # verify_signatures=False (that path is in-process-only).
-        resp = self.colonies.handle(envelope, external=True)  # may hang (long-poll)
+        try:
+            resp = self.colonies.handle(envelope, external=True)  # may hang (long-poll)
+        except faults.FaultInjected:
+            # Injected server crash window: die without replying, so the
+            # client sees a reset connection — not a clean error body.
+            self.close_connection = True
+            try:
+                self.connection.close()
+            except OSError:
+                pass
+            return
         status = int(resp.get("status", 200)) if "error" in resp else 200
         self._reply(status, resp)
 
@@ -80,14 +93,32 @@ class ColoniesHttpServer:
 
 
 class HttpTransport:
-    """Client side; compatible with client.Colonies. Retries replicas on 421."""
+    """Client side; compatible with client.Colonies.
 
-    def __init__(self, host: str, port: int, fallbacks: list[tuple[str, int]] | None = None):
+    One pass rotates over all endpoints — 421 means "follower, try the
+    next host" (leader failover), connection errors rotate the same way.
+    ``retry=RetryPolicy(...)`` re-runs the pass with capped jittered
+    backoff when every endpoint failed retryably (mid-election cluster,
+    restarting server) — see retry.py; safe for mutating RPCs because
+    the envelope's msgid makes the retry exactly-once server-side."""
+
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        fallbacks: list[tuple[str, int]] | None = None,
+        retry: RetryPolicy | None = None,
+    ):
         self.endpoints = [(host, port)] + list(fallbacks or [])
+        self.retry = retry
         self._preferred = 0
 
     def send(self, envelope: dict, timeout: float = 90.0) -> dict:
+        return send_with_retry(lambda: self._send_once(envelope, timeout), self.retry)
+
+    def _send_once(self, envelope: dict, timeout: float) -> dict:
         data = json.dumps(envelope).encode()
+        ptype = envelope.get("payloadtype", "")
         last: dict = {"error": "no endpoints", "status": 500}
         order = list(range(len(self.endpoints)))
         order = order[self._preferred :] + order[: self._preferred]
@@ -100,14 +131,27 @@ class HttpTransport:
                 method="POST",
             )
             try:
+                action = faults.hit("transport.send", payloadtype=ptype)
                 with urllib.request.urlopen(req, timeout=timeout) as resp:
                     body = json.loads(resp.read())
+                if action == "duplicate":  # at-least-once delivery: send twice
+                    with urllib.request.urlopen(req, timeout=timeout) as resp:
+                        body = json.loads(resp.read())
+                faults.hit("transport.recv", payloadtype=ptype)
             except urllib.error.HTTPError as e:
                 try:
                     body = json.loads(e.read())
                 except (ValueError, json.JSONDecodeError):
                     body = {"error": str(e), "status": e.code}
-            except (urllib.error.URLError, TimeoutError, ConnectionError) as e:
+            except (
+                urllib.error.URLError,
+                TimeoutError,
+                ConnectionError,
+                http.client.HTTPException,
+            ) as e:
+                # Includes server-side injected crash windows: do_POST
+                # closes the socket without a reply, which surfaces here
+                # as RemoteDisconnected/ConnectionError.
                 last = {"error": f"transport: {e}", "status": 503}
                 continue
             if body.get("status") == 421:  # follower — try next replica

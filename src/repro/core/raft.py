@@ -25,6 +25,7 @@ from typing import Any, Callable
 from ..analysis import statehash
 from ..analysis.contracts import no_locks_held
 from ..analysis.locktrack import allow_wait, make_lock
+from ..runtime import faults
 
 # propose_and_wait parks on a node's commit_cv (built on the raft lock)
 # while the HA assign path still holds the leader-local assignlocal lock
@@ -511,6 +512,12 @@ class ThreadedRaftCluster:
     def start(self) -> None:
         def loop() -> None:
             while not self._stop.wait(self.tick_ms / 1000.0):
+                try:
+                    # Chaos hook: a raised fault skips this tick, a delay
+                    # stalls the event loop (election churn under soak).
+                    faults.hit("raft.tick")
+                except faults.FaultInjected:
+                    continue
                 with self._lock:
                     self.sim.step(self.tick_ms)
 

@@ -22,10 +22,19 @@ def canonical(payload: dict) -> str:
     return json.dumps(payload, sort_keys=True, separators=(",", ":"))
 
 
-def sign_envelope(payloadtype: str, payload: dict, prvkey: str) -> dict:
+def sign_envelope(
+    payloadtype: str, payload: dict, prvkey: str, msgid: str | None = None
+) -> dict:
+    """Sign an envelope; an idempotency key (``msgid``) is folded into the
+    signed string so a replayed-by-attacker envelope cannot be re-keyed
+    (tampering with msgid breaks signature recovery — see ROBUSTNESS.md).
+    Envelopes without a msgid sign exactly as before (back-compat)."""
     body = canonical(payload)
-    sig = Crypto.sign(payloadtype + body, prvkey)
-    return {"payloadtype": payloadtype, "payload": body, "signature": sig}
+    sig = Crypto.sign(payloadtype + body + (msgid or ""), prvkey)
+    env = {"payloadtype": payloadtype, "payload": body, "signature": sig}
+    if msgid:
+        env["msgid"] = msgid
+    return env
 
 
 def open_envelope(
@@ -55,7 +64,7 @@ def open_envelope(
     if not sig:
         raise AuthError("missing signature")
     try:
-        identity = Crypto.recover(ptype + body, sig)
+        identity = Crypto.recover(ptype + body + env.get("msgid", ""), sig)
     except (ValueError, AssertionError) as e:
         raise AuthError(f"signature recovery failed: {e}") from e
     return identity, ptype, payload

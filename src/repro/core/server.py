@@ -30,6 +30,7 @@ Cron, generators and CFS are separate modules wired in by this server.
 
 from __future__ import annotations
 
+import logging
 import threading
 from typing import Any, Callable
 
@@ -37,6 +38,8 @@ from ..analysis import authtrack
 from ..analysis.authtrack import requires_auth
 from ..analysis.contracts import no_locks_held
 from ..analysis.locktrack import make_lock
+from ..runtime import faults
+from . import idempotency
 from .database import Database, MemoryDatabase
 from .errors import (
     AuthError,
@@ -140,6 +143,9 @@ class ColoniesServer:
         self._propose_op: Callable[[dict], None] | None = None
         self._stop = threading.Event()
         self._failsafe_thread: threading.Thread | None = None
+        # Exceptions swallowed (but counted) by the failsafe loop; the
+        # first one is logged with traceback. Surfaced via colonystats.
+        self.failsafe_errors = 0
 
     # ------------------------------------------------------------------ RPC
     def handle(self, envelope: dict, external: bool = False) -> dict:
@@ -155,6 +161,11 @@ class ColoniesServer:
             identity, ptype, payload = open_envelope(
                 envelope, verify=verify, allow_unverified=not verify
             )
+            # Injected server death before dispatch: the request has no
+            # effect and the transport sees a dead connection. The raise
+            # (FaultInjected is a ConnectionError, not a ColoniesError)
+            # deliberately escapes the handlers below.
+            faults.hit("server.pre_dispatch", payloadtype=ptype)
             handler = self._handlers.get(ptype)
             if handler is None:
                 for ext in self.extensions:
@@ -163,11 +174,40 @@ class ColoniesServer:
                         break
             if handler is None:
                 raise ValidationError(f"unknown payloadtype {ptype!r}")
+            # Exactly-once mutating RPCs (ROBUSTNESS.md): a keyed envelope
+            # whose (identity, msgid) already has a recorded reply is a
+            # client retry of a committed operation — replay the reply
+            # without re-running the handler. The msgid is covered by the
+            # envelope signature, so only the original signer can replay.
+            msgid = str(envelope.get("msgid") or "")
+            dedup_key = ""
+            if msgid and idempotency.classify(ptype) == idempotency.KEYED:
+                dedup_key = f"{identity}:{msgid}"
+                cached = self.db.dedup_get(dedup_key)
+                if cached is not None:
+                    return {"result": cached, "replayed": True}
             # Under REPRO_AUTH_CHECK=1 the scope arms the database guards:
             # colony-scoped access inside this dispatch requires a recorded
             # auth fact (see repro/analysis/authtrack.py).
-            with authtrack.request_scope():
-                result = handler(identity, payload)
+            token = idempotency.set_current(msgid)
+            try:
+                with authtrack.request_scope():
+                    result = handler(identity, payload)
+            finally:
+                idempotency.reset_current(token)
+            # Record successes only: an error reply implies nothing
+            # committed (handlers raise before mutating), so the retry
+            # must re-execute, not replay the failure.
+            if dedup_key:
+                self.db.dedup_put(
+                    dedup_key,
+                    idempotency.reply_colony(ptype, payload, result),
+                    now_ns(),
+                    result,
+                )
+            # The crash-after-commit-before-reply window: effect and dedup
+            # record are durable, the reply is lost.
+            faults.hit("server.post_commit", payloadtype=ptype)
             return {"result": result}
         except NotLeaderError as e:
             return {"error": str(e), "status": e.status, "leader": e.leader}
@@ -403,6 +443,10 @@ class ColoniesServer:
                     "processid": p.processid,
                     "executorid": ex.executorid,
                     "ts": now_ns(),
+                    # The request's idempotency key rides the Raft entry so
+                    # followers see which client RPC produced this op
+                    # (ROBUSTNESS.md; "" for unkeyed/internal callers).
+                    "msgid": idempotency.current(),
                 }
                 if self._propose_op is not None:
                     # HA path: serialize through the Raft log before applying.
@@ -472,6 +516,9 @@ class ColoniesServer:
             "out": payload.get("out", []),
             "errors": payload.get("errors", []),
             "ts": now_ns(),
+            # Idempotency key of the originating RPC, replicated so
+            # followers can attribute the close (ROBUSTNESS.md).
+            "msgid": idempotency.current(),
         }
         if self._propose_op is not None:
             # HA path: serialize close through the Raft log. The apply's
@@ -644,6 +691,7 @@ class ColoniesServer:
         for state, n in self.db.colony_stats(colony).items():
             stats[state] = stats.get(state, 0) + n
         stats["executors"] = len(self.db.list_executors(colony))
+        stats["failsafe_errors"] = self.failsafe_errors
         return stats
 
     # -- failsafe (paper §3.4) --------------------------------------------------
@@ -719,16 +767,30 @@ class ColoniesServer:
         return {"reset": reset, "failed": failed, "waitexpired": expired}
 
     def start_background(self, failsafe_interval: float = 0.25) -> None:
-        """Start the periodic failsafe scanner (leader-gated in HA mode)."""
+        """Start the periodic failsafe scanner (leader-gated in HA mode).
+
+        The loop must survive anything a scan or extension tick throws —
+        a dead failsafe thread silently disables the paper's §3.4 story.
+        Failures are counted (``failsafe_errors``, surfaced via
+        ``colonystats``) and the first traceback is logged once."""
 
         def loop() -> None:
             while not self._stop.wait(failsafe_interval):
-                if self._is_leader():
-                    self.failsafe_scan()
-                for ext in self.extensions:
-                    tick = getattr(ext, "tick", None)
-                    if tick is not None and self._is_leader():
-                        tick()
+                try:
+                    if self._is_leader():
+                        self.failsafe_scan()
+                    for ext in self.extensions:
+                        tick = getattr(ext, "tick", None)
+                        if tick is not None and self._is_leader():
+                            tick()
+                except Exception:
+                    if self.failsafe_errors == 0:
+                        logging.getLogger(__name__).exception(
+                            "failsafe loop error on %s (counting further "
+                            "errors silently; see colonystats.failsafe_errors)",
+                            self.name,
+                        )
+                    self.failsafe_errors += 1
 
         self._failsafe_thread = threading.Thread(target=loop, daemon=True)
         self._failsafe_thread.start()

@@ -1,0 +1,238 @@
+"""Chaos soak gate (ROBUSTNESS.md): a 3-replica HA cluster under a
+seeded probabilistic FaultPlan (transport resets + drops) AND a
+ChaosMonkey partitioning raft replicas, driven by retrying clients with
+idempotency-keyed RPCs. Every submitted process must reach a terminal
+state exactly once, with zero replication divergence.
+
+Run by ``scripts/verify.sh`` as ``REPRO_REPL_CHECK=1 pytest
+tests/test_chaos_soak.py``; the repl fixture below also arms the digest
+harness when the env var is absent, so a bare run checks the same
+contracts.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.analysis import statehash
+from repro.core import Colonies, ExecutorBase, InProcTransport, RetryPolicy
+from repro.core.cluster import HAColonyCluster
+from repro.core.crypto import Crypto
+from repro.runtime import faults
+from repro.runtime.chaos import ChaosMonkey
+
+# Generous budget/deadline: during a leader election every replica
+# answers 421 for up to a second or two, and the soak must ride it out
+# rather than surface NotLeaderError to the test thread.
+SOAK_RETRY = RetryPolicy(base_s=0.01, cap_s=0.3, deadline_s=20.0, budget=64, seed=3)
+
+N_PROCESSES = 24
+SOAK_DEADLINE_S = 45.0
+
+
+def spec(i):
+    return {
+        "conditions": {"colonyname": "dev", "executortype": "worker"},
+        "funcname": "echo",
+        "args": [i],
+        "maxexectime": 5,
+        "maxretries": 3,
+    }
+
+
+@pytest.fixture()
+def repl_check():
+    prev = statehash.is_enabled()
+    statehash.enable(True)
+    yield
+    statehash.enable(prev)
+
+
+@pytest.fixture()
+def ha(repl_check):
+    server_prv = Crypto.prvkey()
+    colony_prv = Crypto.prvkey()
+    cluster = HAColonyCluster(Crypto.id(server_prv), replicas=3, seed=31)
+    cluster.start(failsafe_interval=0.2)
+    assert cluster.wait_for_leader(10)
+    client = Colonies(InProcTransport(cluster.servers, retry=SOAK_RETRY))
+    client.add_colony("dev", Crypto.id(colony_prv), server_prv)
+    try:
+        yield cluster, client, colony_prv
+    finally:
+        cluster.stop()
+
+
+def _fresh_client(cluster):
+    """Each actor gets its own transport: retry state and the 421
+    preferred-replica hint are per-connection, like real sockets."""
+    return Colonies(InProcTransport(cluster.servers, retry=SOAK_RETRY))
+
+
+# ---------------------------------------------------------------------------
+# HA fault matrix: the reply-loss window crossed with replication
+# ---------------------------------------------------------------------------
+
+
+class TestHAFaultMatrix:
+    """Reset-after-commit-before-reply against the replicated broker:
+    the retry must replay the recorded reply (not re-propose the op),
+    and the double-apply digest harness must stay clean."""
+
+    def test_submit_reply_lost_yields_one_process(self, ha):
+        cluster, client, colony_prv = ha
+        plan = faults.FaultPlan(
+            [
+                faults.FaultRule(
+                    "transport.recv",
+                    "reset",
+                    payloadtype="submitfunctionspec",
+                )
+            ]
+        )
+        with faults.active(plan):
+            p = client.submit(spec(1), colony_prv)
+        assert plan.fired() == 1
+        procs = client.get_processes("dev", colony_prv)
+        assert [q["processid"] for q in procs] == [p["processid"]]
+        cluster.raft.check_divergence()
+
+    def test_close_reply_lost_closes_exactly_once(self, ha):
+        cluster, client, colony_prv = ha
+        ex = ExecutorBase(
+            _fresh_client(cluster), "dev", "m-w", "worker", colony_prvkey=colony_prv
+        )
+        p = client.submit(spec(1), colony_prv)
+        pd = ex.client.assign("dev", 5.0, ex.prvkey)
+        assert pd["processid"] == p["processid"]
+        plan = faults.FaultPlan(
+            [faults.FaultRule("transport.recv", "reset", payloadtype="close")]
+        )
+        with faults.active(plan):
+            # The transport retries; the replay returns the recorded
+            # reply instead of raising ConflictError at the second close.
+            ex.client.close(p["processid"], ["out"], ex.prvkey)
+        assert plan.fired() == 1
+        done = client.get_process(p["processid"], colony_prv)
+        assert done["state"] == "successful" and done["out"] == ["out"]
+        cluster.raft.check_divergence()
+        # Exactly one close entry made it into the Raft log, and it
+        # carries the client's idempotency key (REPLICATION.md matrix).
+        lid = cluster.raft.leader_id()
+        closes = [
+            le.entry
+            for le in cluster.raft.nodes[lid].log
+            if le.entry.get("op") == "close"
+        ]
+        assert len(closes) == 1
+        assert closes[0]["msgid"]
+
+
+# ---------------------------------------------------------------------------
+# The soak
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_soak_every_process_terminal_exactly_once(ha):
+    cluster, client, colony_prv = ha
+
+    # Probabilistic infrastructure failure for the whole soak: ~8% of
+    # replies are lost after commit, ~4% of requests never arrive.
+    plan = faults.FaultPlan(
+        [
+            faults.FaultRule(
+                "transport.recv", "reset", times=None, prob=0.08
+            ),
+            faults.FaultRule(
+                "transport.send", "drop", times=None, prob=0.04
+            ),
+        ],
+        seed=1234,
+    )
+
+    # ChaosMonkey partitions one raft replica at a time (kill the next,
+    # revive the previous), forcing elections mid-traffic.
+    state = {"down": None, "next": 0}
+    guard = threading.Lock()
+
+    def kill():
+        with guard:
+            if state["down"] is not None:
+                cluster.revive_server(state["down"])
+            state["down"] = state["next"]
+            state["next"] = (state["next"] + 1) % 3
+            cluster.kill_server(state["down"])
+
+    monkey = ChaosMonkey(kill, lambda: None, interval=(0.6, 1.2), seed=5)
+
+    executors = [
+        ExecutorBase(
+            _fresh_client(cluster), "dev", f"soak-{i}", "worker",
+            colony_prvkey=colony_prv,
+        )
+        for i in range(2)
+    ]
+    for ex in executors:
+        ex.register_function("echo", lambda ctx, *a: list(a))
+
+    pids = []
+    with faults.active(plan):
+        for ex in executors:
+            ex.start(poll_timeout=0.3)
+        monkey.start()
+        try:
+            for i in range(N_PROCESSES):
+                pids.append(client.submit(spec(i), colony_prv)["processid"])
+            deadline = time.time() + SOAK_DEADLINE_S
+            remaining = set(pids)
+            while remaining and time.time() < deadline:
+                done = {
+                    pid
+                    for pid in remaining
+                    if client.get_process(pid, colony_prv)["state"]
+                    in ("successful", "failed")
+                }
+                remaining -= done
+                if remaining:
+                    time.sleep(0.2)
+        finally:
+            monkey.stop()
+            with guard:
+                if state["down"] is not None:
+                    cluster.revive_server(state["down"])
+                    state["down"] = None
+            for ex in executors:
+                ex.stop()
+
+    assert not remaining, (
+        f"{len(remaining)} of {N_PROCESSES} processes never reached a"
+        f" terminal state (faults fired: {plan.fired()},"
+        f" monkey kills: {monkey.kills})"
+    )
+
+    # Exactly once: every submitted pid is terminal, no duplicates exist.
+    procs = client.get_processes("dev", colony_prv)
+    assert sorted(q["processid"] for q in procs) == sorted(pids)
+    states = {q["processid"]: q["state"] for q in procs}
+    assert all(s in ("successful", "failed") for s in states.values())
+
+    # The soak only proves something if the chaos actually happened.
+    assert plan.fired() >= 5, f"fault plan barely fired ({plan.fired()})"
+    assert monkey.kills >= 1
+
+    # Replication stayed convergent under partitions + replayed RPCs.
+    journal = cluster.raft.journal
+    assert journal is not None
+    commit = max(n.commit_index for n in cluster.raft.nodes.values())
+    catchup = time.time() + 20
+    while time.time() < catchup:
+        if all(n.last_applied >= commit for n in cluster.raft.nodes.values()):
+            break
+        time.sleep(0.05)
+    cluster.raft.check_divergence()
+    journal.check()
+
+    # The brokers' failsafe loops never crashed silently.
+    stats = client.stats("dev", colony_prv)
+    assert stats["failsafe_errors"] == 0

@@ -1,0 +1,492 @@
+"""End-to-end RPC fault tolerance (ROBUSTNESS.md).
+
+The fault matrix the ISSUE demands: {drop, duplicate, reset,
+crash-after-commit} x {submit, close, addchild, assign}, on both
+database backends, asserting exactly-once effects — one process per
+submit, one terminal transition per close — plus units for the fault
+plane, retry policy, msgid signature coverage, the executor's
+pending-close journal, run_forever backoff, wait() deadline honoring,
+and the failsafe error counter.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    Colonies,
+    InProcTransport,
+    MemoryDatabase,
+    RetryPolicy,
+    SqliteDatabase,
+    TransportError,
+)
+from repro.core.client import _ERROR_TYPES
+from repro.core.cluster import standalone_server
+from repro.core.crypto import Crypto
+from repro.core.errors import ColoniesError, TimeoutError_
+from repro.core.executor import ExecutorBase
+from repro.core.process import new_id
+from repro.core.retry import send_with_retry
+from repro.core.security import sign_envelope
+from repro.runtime import faults
+from repro.runtime.faults import FaultInjected, FaultPlan, FaultRule
+
+SPEC = {"funcname": "echo", "conditions": {"colonyname": "dev", "executortype": "cli"}}
+
+# A tight policy so injected faults retry in milliseconds, not seconds.
+FAST_RETRY = RetryPolicy(base_s=0.001, cap_s=0.01, deadline_s=5.0, budget=8, seed=7)
+
+
+def _rig(db):
+    """Standalone server + signed client/executor keys on the given db."""
+    server_prv = Crypto.prvkey()
+    colony_prv = Crypto.prvkey()
+    exec_prv = Crypto.prvkey()
+    srv = standalone_server(Crypto.id(server_prv), db)
+    client = Colonies(InProcTransport([srv], retry=FAST_RETRY))
+    client.add_colony("dev", Crypto.id(colony_prv), server_prv)
+    client.add_executor(
+        {
+            "executorname": "e1",
+            "executorid": Crypto.id(exec_prv),
+            "colonyname": "dev",
+            "executortype": "cli",
+        },
+        colony_prv,
+    )
+    client.approve_executor(Crypto.id(exec_prv), colony_prv)
+    return srv, client, exec_prv
+
+
+@pytest.fixture(params=["memory", "sqlite"])
+def rig(request):
+    db = MemoryDatabase() if request.param == "memory" else SqliteDatabase()
+    srv, client, exec_prv = _rig(db)
+    yield {"server": srv, "client": client, "prvkey": exec_prv}
+    srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# Fault plane units
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlane:
+    def test_zero_cost_when_unset(self):
+        assert faults.hit("transport.send") is None
+
+    def test_scheduling_after_times(self):
+        plan = FaultPlan([FaultRule("db.commit", "drop", after=1, times=2)])
+        with faults.active(plan):
+            faults.hit("db.commit")  # skipped (after=1)
+            for _ in range(2):
+                with pytest.raises(FaultInjected):
+                    faults.hit("db.commit")
+            faults.hit("db.commit")  # times exhausted
+        assert plan.fired("db.commit") == 2
+
+    def test_payloadtype_filter_and_duplicate(self):
+        plan = FaultPlan(
+            [FaultRule("transport.send", "duplicate", payloadtype="close")]
+        )
+        with faults.active(plan):
+            assert faults.hit("transport.send", payloadtype="submitfunctionspec") is None
+            assert faults.hit("transport.send", payloadtype="close") == "duplicate"
+
+    def test_seeded_probability_deterministic(self):
+        def fire_pattern(seed):
+            plan = FaultPlan(
+                [FaultRule("raft.tick", "delay", delay_s=0, prob=0.5, times=None)],
+                seed=seed,
+            )
+            with faults.active(plan):
+                for _ in range(32):
+                    faults.hit("raft.tick")
+            return [a for _s, a, _c in plan.log]
+
+        assert fire_pattern(3) == fire_pattern(3)
+        assert fire_pattern(3) != fire_pattern(4)
+
+    def test_unknown_site_rejected(self):
+        with pytest.raises(ValueError):
+            FaultRule("nonexistent.site", "drop")
+        with pytest.raises(ValueError):
+            FaultRule("db.commit", "explode")
+
+    def test_install_is_exclusive(self):
+        plan = FaultPlan()
+        with faults.active(plan):
+            with pytest.raises(RuntimeError):
+                faults.install(FaultPlan())
+        assert faults.current() is None
+
+
+class TestRetryPolicy:
+    def test_retries_until_success(self):
+        calls = []
+
+        def attempt():
+            calls.append(1)
+            if len(calls) < 3:
+                return {"error": "transport: down", "status": 503}
+            return {"result": "ok"}
+
+        resp = send_with_retry(attempt, FAST_RETRY)
+        assert resp == {"result": "ok"}
+        assert len(calls) == 3
+
+    def test_budget_exhaustion_returns_last_error(self):
+        calls = []
+
+        def attempt():
+            calls.append(1)
+            return {"error": "transport: down", "status": 503}
+
+        resp = send_with_retry(attempt, RetryPolicy(base_s=0.001, budget=3, seed=1))
+        assert resp["status"] == 503
+        assert len(calls) == 3
+
+    def test_application_errors_not_retried(self):
+        calls = []
+
+        def attempt():
+            calls.append(1)
+            return {"error": "nope", "status": 403}
+
+        assert send_with_retry(attempt, FAST_RETRY)["status"] == 403
+        assert len(calls) == 1
+
+    def test_delays_are_capped_and_jittered(self):
+        it = RetryPolicy(base_s=0.01, cap_s=0.05, seed=9).delays()
+        ds = [it.next_delay() for _ in range(50)]
+        assert all(0.01 <= d <= 0.05 for d in ds)
+        assert len(set(ds)) > 1  # decorrelated, not a fixed ladder
+
+    def test_503_maps_to_transport_error(self):
+        assert _ERROR_TYPES[503] is TransportError
+
+    def test_no_policy_means_single_attempt(self):
+        calls = []
+
+        def attempt():
+            calls.append(1)
+            return {"error": "transport: down", "status": 503}
+
+        send_with_retry(attempt, None)
+        assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# msgid protocol
+# ---------------------------------------------------------------------------
+
+
+class TestMsgidProtocol:
+    def test_msgid_is_signature_covered(self, rig):
+        srv = rig["server"]
+        env = sign_envelope(
+            "submitfunctionspec", {"spec": SPEC}, rig["prvkey"], msgid=new_id()
+        )
+        tampered = dict(env)
+        tampered["msgid"] = new_id()
+        resp = srv.handle(tampered)
+        # Recovered identity changes under tamper -> zero-trust rejection.
+        assert resp.get("status") == 403
+
+    def test_replay_returns_recorded_reply(self, rig):
+        srv = rig["server"]
+        env = sign_envelope(
+            "submitfunctionspec", {"spec": SPEC}, rig["prvkey"], msgid=new_id()
+        )
+        r1 = srv.handle(env)
+        r2 = srv.handle(env)
+        assert r2.get("replayed") is True
+        assert r1["result"]["processid"] == r2["result"]["processid"]
+        procs = rig["client"].get_processes("dev", rig["prvkey"])
+        assert len(procs) == 1
+
+    def test_unkeyed_envelope_still_works(self, rig):
+        # Back-compat: old clients that stamp no msgid sign the old string.
+        env = sign_envelope("colonystats", {"colonyname": "dev"}, rig["prvkey"])
+        assert "msgid" not in env
+        assert "result" in rig["server"].handle(env)
+
+    def test_dedup_records_are_per_identity(self, rig):
+        # Same msgid under a different signer is a different operation:
+        # the dedup key is identity-scoped, so an attacker replaying a
+        # captured msgid with their own key cannot read the victim's reply.
+        srv = rig["server"]
+        m = new_id()
+        e1 = sign_envelope("submitfunctionspec", {"spec": SPEC}, rig["prvkey"], msgid=m)
+        assert "result" in srv.handle(e1)
+        prv2 = Crypto.prvkey()  # not a colony member
+        e2 = sign_envelope("submitfunctionspec", {"spec": SPEC}, prv2, msgid=m)
+        resp = srv.handle(e2)
+        assert resp.get("replayed") is None  # not a replay — freshly authorized
+        assert resp.get("status") == 403
+
+
+# ---------------------------------------------------------------------------
+# The fault matrix: {drop, duplicate, reset, crash-after-commit} x
+# {submit, close, addchild, assign} — exactly-once effects on both backends.
+# ---------------------------------------------------------------------------
+
+FAULTS = {
+    # request lost before the server saw it: effect happens on the retry
+    "drop": FaultRule("transport.send", "drop"),
+    # delivered twice by the transport: second delivery must replay
+    "duplicate": FaultRule("transport.send", "duplicate"),
+    # reply lost after the server committed: retry must replay
+    "reset": FaultRule("transport.recv", "reset"),
+    # server dies after commit+dedup-record, before replying
+    "crash": FaultRule("server.post_commit", "crash"),
+}
+
+
+def _submit_running(client, prvkey):
+    """Submit + assign one process so close/addchild have a target."""
+    p = client.submit(SPEC, prvkey)
+    a = client.assign("dev", 2.0, prvkey)
+    assert a["processid"] == p["processid"]
+    return p["processid"]
+
+
+@pytest.mark.parametrize("fault", sorted(FAULTS))
+class TestFaultMatrix:
+    def _plan(self, fault, ptype):
+        r = FAULTS[fault]
+        return FaultPlan([FaultRule(r.site, r.action, payloadtype=ptype)])
+
+    def test_submit_exactly_once(self, rig, fault):
+        client, prvkey = rig["client"], rig["prvkey"]
+        with faults.active(self._plan(fault, "submitfunctionspec")) as plan:
+            p = client.submit(SPEC, prvkey)
+        assert plan.fired() == 1
+        procs = client.get_processes("dev", prvkey)
+        assert [q["processid"] for q in procs] == [p["processid"]]
+
+    def test_close_exactly_once(self, rig, fault):
+        client, prvkey = rig["client"], rig["prvkey"]
+        pid = _submit_running(client, prvkey)
+        with faults.active(self._plan(fault, "close")) as plan:
+            closed = client.close(pid, ["out"], prvkey)
+        assert plan.fired() == 1
+        assert closed["state"] == "successful"
+        final = client.get_process(pid, prvkey)
+        assert final["state"] == "successful"
+        assert final["out"] == ["out"]
+        stats = client.stats("dev", prvkey)
+        assert stats["successful"] == 1 and stats["failed"] == 0
+
+    def test_addchild_exactly_once(self, rig, fault):
+        client, prvkey = rig["client"], rig["prvkey"]
+        pid = _submit_running(client, prvkey)
+        with faults.active(self._plan(fault, "addchild")) as plan:
+            child = client.add_child(pid, SPEC, prvkey)
+        assert plan.fired() == 1
+        parent = client.get_process(pid, prvkey)
+        assert parent["children"] == [child["processid"]]
+        procs = client.get_processes("dev", prvkey)
+        assert len(procs) == 2
+
+    def test_assign_exactly_once(self, rig, fault):
+        client, prvkey = rig["client"], rig["prvkey"]
+        p = client.submit(SPEC, prvkey)
+        with faults.active(self._plan(fault, "assign")) as plan:
+            a = client.assign("dev", 2.0, prvkey)
+        assert plan.fired() == 1
+        assert a["processid"] == p["processid"]
+        # The single process is RUNNING and assigned to us exactly once.
+        stats = client.stats("dev", prvkey)
+        assert stats["running"] == 1 and stats["waiting"] == 0
+
+
+class TestCrashBeforeCommit:
+    """pre-dispatch and db.commit faults: no effect happened, the retry
+    must EXECUTE (not replay) and still end with exactly one process."""
+
+    @pytest.mark.parametrize("site", ["server.pre_dispatch", "db.commit"])
+    def test_submit(self, rig, site):
+        client, prvkey = rig["client"], rig["prvkey"]
+        plan = FaultPlan([FaultRule(site, "crash", times=1)])
+        with faults.active(plan):
+            p = client.submit(SPEC, prvkey)
+        assert plan.fired() == 1
+        procs = client.get_processes("dev", prvkey)
+        assert [q["processid"] for q in procs] == [p["processid"]]
+
+
+# ---------------------------------------------------------------------------
+# Executor hardening
+# ---------------------------------------------------------------------------
+
+
+class TestPendingCloseJournal:
+    def test_close_journaled_and_flushed(self):
+        server_prv = Crypto.prvkey()
+        colony_prv = Crypto.prvkey()
+        srv = standalone_server(Crypto.id(server_prv))
+        client = Colonies(InProcTransport([srv]))  # NO transport retry
+        client.add_colony("dev", Crypto.id(colony_prv), server_prv)
+        ex = ExecutorBase(client, "dev", "worker", "cli", colony_prvkey=colony_prv)
+        ex.register_function("echo", lambda ctx, *a: list(a))
+        client.submit(
+            {"funcname": "echo", "args": [1], "conditions": {"colonyname": "dev", "executortype": "cli"}},
+            ex.prvkey,
+        )
+        # Every close attempt dies at the transport until the plan drains.
+        plan = FaultPlan(
+            [FaultRule("transport.send", "drop", payloadtype="close", times=2)]
+        )
+        with faults.active(plan):
+            ran = ex.step(2.0)
+        assert ran
+        assert ex.processed == 0  # not yet delivered
+        assert ex.flush_pending_closes(force=True) == 0
+        assert ex.processed == 1
+        p = client.get_processes("dev", ex.prvkey, state="successful")
+        assert len(p) == 1 and p[0]["out"] == [1]
+
+    def test_journal_reuses_msgid_no_conflict(self):
+        """First close COMMITS but the reply is lost; the journaled retry
+        must replay via dedup instead of raising ConflictError."""
+        server_prv = Crypto.prvkey()
+        colony_prv = Crypto.prvkey()
+        srv = standalone_server(Crypto.id(server_prv))
+        client = Colonies(InProcTransport([srv]))
+        client.add_colony("dev", Crypto.id(colony_prv), server_prv)
+        ex = ExecutorBase(client, "dev", "worker", "cli", colony_prvkey=colony_prv)
+        ex.register_function("echo", lambda ctx, *a: list(a))
+        client.submit(
+            {"funcname": "echo", "args": [2], "conditions": {"colonyname": "dev", "executortype": "cli"}},
+            ex.prvkey,
+        )
+        plan = FaultPlan(
+            [FaultRule("transport.recv", "reset", payloadtype="close", times=1)]
+        )
+        with faults.active(plan):
+            ex.step(2.0)
+        assert ex.flush_pending_closes(force=True) == 0
+        assert ex.processed == 1 and ex.failed == 0
+        stats = client.stats("dev", ex.prvkey)
+        assert stats["successful"] == 1
+
+    def test_stop_drains_journal(self):
+        server_prv = Crypto.prvkey()
+        colony_prv = Crypto.prvkey()
+        srv = standalone_server(Crypto.id(server_prv))
+        client = Colonies(InProcTransport([srv]))
+        client.add_colony("dev", Crypto.id(colony_prv), server_prv)
+        ex = ExecutorBase(client, "dev", "worker", "cli", colony_prvkey=colony_prv)
+        ex.register_function("echo", lambda ctx, *a: list(a))
+        client.submit(
+            {"funcname": "echo", "args": [3], "conditions": {"colonyname": "dev", "executortype": "cli"}},
+            ex.prvkey,
+        )
+        plan = FaultPlan(
+            [FaultRule("transport.send", "drop", payloadtype="close", times=3)]
+        )
+        with faults.active(plan):
+            ex.step(2.0)
+            assert ex.processed == 0
+            ex.stop()  # graceful drain delivers the journaled close
+        assert ex.processed == 1
+        assert client.stats("dev", ex.prvkey)["successful"] == 1
+
+
+class _CountingDownTransport:
+    """Permanently down: every send fails retryably, counting calls."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def send(self, envelope, timeout=None):
+        self.calls += 1
+        return {"error": "transport: connection refused", "status": 503}
+
+
+class TestRunForeverBackoff:
+    def test_backoff_reduces_call_rate(self):
+        transport = _CountingDownTransport()
+        client = Colonies(transport, insecure=True)
+        ex = ExecutorBase(client, "dev", "worker", "cli")
+        ex.start(poll_timeout=0.01)
+        time.sleep(0.6)
+        ex.stop()
+        # The seed's fixed 0.05s wait would allow ~12 calls in 0.6s; the
+        # capped exponential backoff (0.05 * 2^n, jittered) must stay well
+        # under that.
+        assert 1 <= transport.calls <= 7, transport.calls
+
+    def test_backoff_is_capped(self):
+        transport = _CountingDownTransport()
+        client = Colonies(transport, insecure=True)
+        ex = ExecutorBase(client, "dev", "worker", "cli")
+        assert ex._error_backoff(1) <= 0.05
+        assert ex._error_backoff(100) <= 2.0  # PENDING_BACKOFF_CAP_S
+
+
+# ---------------------------------------------------------------------------
+# Satellites: wait() deadline, failsafe_errors counter
+# ---------------------------------------------------------------------------
+
+
+class _HangingTransport:
+    """Honors the per-request timeout arg; hangs up to it, then 503s."""
+
+    def __init__(self):
+        self.timeouts = []
+
+    def send(self, envelope, timeout=90.0):
+        self.timeouts.append(timeout)
+        time.sleep(min(timeout, 0.05))
+        return {"error": "transport: read timed out", "status": 503}
+
+
+class TestWaitDeadline:
+    def test_wait_honors_deadline_against_hung_transport(self):
+        client = Colonies(_HangingTransport(), insecure=True)
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError_) as ei:
+            client.wait("pid", Crypto.prvkey(), timeout=0.3, poll=0.01)
+        elapsed = time.monotonic() - t0
+        assert elapsed < 2.0  # seed behaviour: 90s hang per poll
+        # surfaces the last non-timeout error, not a generic message
+        assert "read timed out" in str(ei.value)
+
+    def test_wait_passes_remaining_budget_as_poll_timeout(self):
+        tr = _HangingTransport()
+        client = Colonies(tr, insecure=True)
+        with pytest.raises(TimeoutError_):
+            client.wait("pid", Crypto.prvkey(), timeout=0.2, poll=0.01)
+        assert tr.timeouts and all(t <= 0.21 for t in tr.timeouts)
+
+    def test_wait_still_returns_terminal_process(self, rig):
+        client, prvkey = rig["client"], rig["prvkey"]
+        pid = _submit_running(client, prvkey)
+        client.close(pid, [], prvkey)
+        assert client.wait(pid, prvkey, timeout=2.0)["state"] == "successful"
+
+
+class TestFailsafeErrorCounter:
+    def test_counter_surfaces_via_stats(self, rig):
+        srv, client, prvkey = rig["server"], rig["client"], rig["prvkey"]
+
+        class _Boom:
+            def handlers(self):
+                return {}
+
+            def tick(self):
+                raise RuntimeError("tick exploded")
+
+        srv.extensions.append(_Boom())
+        srv.start_background(failsafe_interval=0.01)
+        deadline = time.monotonic() + 2.0
+        while time.monotonic() < deadline:
+            if client.stats("dev", prvkey)["failsafe_errors"] >= 2:
+                break
+            time.sleep(0.02)
+        stats = client.stats("dev", prvkey)
+        assert stats["failsafe_errors"] >= 2  # loop survived and counted

@@ -164,7 +164,10 @@ def test_replicated_ops_literal_matches_server_api():
     assert set(REPLICATED_OPS) == {"assign", "close"}
     for op, op_spec in REPLICATED_OPS.items():
         assert {"ts", "opid"} <= set(op_spec["required"])
-        assert set(op_spec["leader_stamped"]) == {"opid", "ts"}
+        # msgid joined opid/ts with the idempotency plane (ROBUSTNESS.md):
+        # the client's key is fixed on the leader so a re-proposed entry
+        # replays identically on every replica.
+        assert set(op_spec["leader_stamped"]) == {"opid", "ts", "msgid"}
     # collect_ops (what replmap renders) parses the same literal.
     with open("src/repro/core/cluster.py", encoding="utf-8") as fh:
         parsed = collect_ops([("cluster.py", fh.read())])
