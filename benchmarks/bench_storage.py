@@ -1,0 +1,100 @@
+"""Blob-plane benchmark (STORAGE.md): put/get/repair latency vs shard
+count, over both child backends.
+
+Three questions the sharded design must answer with numbers:
+
+* what does R-way replication cost on the write path (put latency vs a
+  single raw backend, across shard counts)?
+* is the read path free of sharding overhead when all replicas are
+  healthy (get latency vs shard count)?
+* what does a degraded read cost (get that finds its first replica
+  missing, rotates, and read-repairs it on the way out)?
+
+``memdb`` rows use MemoryStorage children (pure data-structure cost);
+``local`` rows use LocalStorage children on disk — the memdb-vs-local
+parity check for the same ring/replication logic. Also prints the
+observed key split across shards so the vnode count can be judged
+(VNODES=64 should keep a 3-shard ring within a few percent of even).
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+from repro.core.blobstore import ShardedStorage
+from repro.core.fs import LocalStorage, MemoryStorage, checksum
+
+from .common import Row, timeit
+
+BLOB = b"\x5a" * 4096  # 4 KiB — checkpoint-chunk-shaped
+SHARD_COUNTS = (1, 3, 8)
+REPLICAS = 2
+SPLIT_KEYS = 600
+
+
+def _payloads(salt: str, n: int) -> list[bytes]:
+    # Salted per benchmark section: content-addressed stores dedupe, so
+    # reused payloads would hit the exists-short-circuit and bench nothing.
+    return [BLOB + salt.encode() + i.to_bytes(4, "big") for i in range(n)]
+
+
+def _bench_backend(backend: str, make_children) -> None:
+    # Raw single-backend baseline (no ring, no replication).
+    raw = make_children("raw", 1)[0]
+    datas = iter(_payloads(f"{backend}-raw", 10_000))
+    us = timeit(lambda: raw.put(next(datas)), 200)
+    Row.add(f"storage_put_raw_{backend}", us, "single backend, no replication")
+    url = raw.put(BLOB)
+    us = timeit(lambda: raw.get(url), 200)
+    Row.add(f"storage_get_raw_{backend}", us, "single backend")
+
+    for n in SHARD_COUNTS:
+        store = ShardedStorage(make_children(f"ring{n}", n), replicas=REPLICAS)
+        datas = iter(_payloads(f"{backend}-{n}", 10_000))
+        us = timeit(lambda: store.put(next(datas)), 200)
+        Row.add(
+            f"storage_put_{backend}_shards_{n}", us,
+            f"R={store.replicas} replicated write",
+        )
+        url = store.put(BLOB)
+        us = timeit(lambda: store.get(url), 200)
+        Row.add(
+            f"storage_get_{backend}_shards_{n}", us,
+            "healthy read, first replica",
+        )
+        if n > 1:
+            # Degraded read: first replica missing -> rotate + read-repair.
+            key = url.split("://", 1)[1]
+            first = store.replicas_for(key)[0]
+
+            def degraded_get():
+                store.shards[first].quarantine(key)
+                return store.get(url)  # repairs `first` on the way out
+
+            us = timeit(degraded_get, 100)
+            Row.add(
+                f"storage_repair_{backend}_shards_{n}", us,
+                "rotate past missing replica + read-repair",
+            )
+
+
+def _key_split(n: int = 3) -> str:
+    store = ShardedStorage([MemoryStorage() for _ in range(n)], replicas=1)
+    counts = [0] * n
+    for i in range(SPLIT_KEYS):
+        counts[store.replicas_for(checksum(i.to_bytes(4, "big")))[0]] += 1
+    return "/".join(str(c) for c in counts)
+
+
+def run() -> None:
+    _bench_backend("memdb", lambda tag, n: [MemoryStorage() for _ in range(n)])
+    tmp = tempfile.mkdtemp(prefix="bench_storage_")
+    try:
+        _bench_backend(
+            "local",
+            lambda tag, n: [LocalStorage(f"{tmp}/{tag}-{i}") for i in range(n)],
+        )
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    Row.add("storage_ring_split_3shards", 0.0, f"{SPLIT_KEYS} keys split {_key_split()}")

@@ -13,7 +13,7 @@ import json
 import os
 import sys
 
-SUITES = ("broker", "workflow", "failsafe_raft", "crypto_cfs", "cfs", "models")
+SUITES = ("broker", "workflow", "failsafe_raft", "crypto_cfs", "cfs", "storage", "models")
 
 
 def _roofline_summary() -> None:

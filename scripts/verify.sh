@@ -45,7 +45,7 @@ fi
 # violations (recorded violations fail the stress assertion).
 REPRO_LOCK_CHECK=1 python -m pytest -q tests/test_concurrency.py \
     tests/test_http_and_ha.py tests/test_failsafe.py \
-    tests/test_replication.py tests/test_faults.py
+    tests/test_replication.py tests/test_faults.py tests/test_blobstore.py
 
 # Runtime auth-fact contracts over the full RPC surface: colony-scoped
 # database access inside a handler dispatch raises without a recorded
@@ -61,7 +61,14 @@ REPRO_REPL_CHECK=1 python -m pytest -q tests/test_raft.py \
 # Chaos soak gate (see ROBUSTNESS.md): 3-replica HA cluster under a
 # seeded FaultPlan (transport resets/drops) and a ChaosMonkey
 # partitioning raft replicas; every process must reach a terminal state
-# exactly once with zero replication divergence.
+# exactly once with zero replication divergence. Includes the blob-plane
+# soak (STORAGE.md): one of three storage shards killed mid-soak, every
+# snapshot still materializing byte-identical, scrub restoring
+# replication.
 REPRO_REPL_CHECK=1 python -m pytest -q tests/test_chaos_soak.py
 
-python -m benchmarks.run broker cfs
+# Blob fault matrix (STORAGE.md gates): put tolerance, get rotation,
+# read-repair, quarantine, CFSClient retry, executor sync directives.
+python -m pytest -q tests/test_blobstore.py
+
+python -m benchmarks.run broker cfs storage

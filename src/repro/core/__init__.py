@@ -5,6 +5,7 @@ Public surface:
   WorkflowSpec, databases, CFS, cron, generators, Raft cluster.
 """
 
+from .blobstore import ShardedStorage
 from .client import Colonies, InProcTransport
 from .crypto import Crypto
 from .database import Database, MemoryDatabase, SqliteDatabase
@@ -16,6 +17,7 @@ from .server import ColoniesServer
 from .spec import Conditions, FunctionSpec, WorkflowSpec
 
 __all__ = [
+    "ShardedStorage",
     "Colonies",
     "InProcTransport",
     "RetryPolicy",

@@ -13,6 +13,7 @@ the process, the SDK client and CFS sync helpers.
 
 from __future__ import annotations
 
+import os
 import random
 import threading
 import time
@@ -87,11 +88,16 @@ class ExecutorBase:
         colony_prvkey: str | None = None,
         prvkey: str | None = None,
         capabilities: dict[str, Any] | None = None,
+        workdir_root: str | None = None,
     ) -> None:
         self.client = client
         self.colonyname = colonyname
         self.executorname = executorname
         self.executortype = executortype
+        # When set, every assigned process gets its own directory under
+        # this root (ctx.workdir) — the sandbox the CFS sync directives
+        # (fs.snapshots / fs.dirs) materialize into and upload from.
+        self.workdir_root = workdir_root
         self.prvkey = prvkey or Crypto.prvkey()
         self.executorid = Crypto.id(self.prvkey)
         self.capabilities = capabilities or {}
@@ -143,6 +149,9 @@ class ExecutorBase:
         funcname = process.spec.funcname
         fn = self._handlers.get(funcname)
         ctx = ProcessContext(process=process, client=self.client, executor=self)
+        if self.workdir_root:
+            ctx.workdir = os.path.join(self.workdir_root, process.processid)
+            os.makedirs(ctx.workdir, exist_ok=True)
         # Run the handler and deliver the result in separate phases, so a
         # transport failure during delivery is never misread as a handler
         # failure (and vice versa).

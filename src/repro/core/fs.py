@@ -21,16 +21,32 @@ from __future__ import annotations
 import hashlib
 import os
 import secrets
+import time
 from typing import Any, Callable
 
 from ..analysis.locktrack import make_lock
 from .database import Database
-from .errors import ConflictError, NotFoundError, ValidationError
+from .errors import ConflictError, NotFoundError, TransportError, ValidationError
 from .process import now_ns
+from .retry import RetryPolicy
 
 
 def checksum(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()
+
+
+def _write_atomic(path: str, data: bytes) -> None:
+    """Crash-safe destination write: tmp + ``os.replace``, so a crash
+    mid-write can never leave a torn file under the final name (the same
+    contract ``LocalStorage.put`` already keeps for blobs)."""
+    tmp = path + f".tmp{secrets.token_hex(4)}"
+    try:
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
 
 
 # ---------------------------------------------------------------------------
@@ -39,7 +55,14 @@ def checksum(data: bytes) -> str:
 
 
 class Storage:
-    """Content-addressed blob store."""
+    """Content-addressed blob store.
+
+    The content-address contract cuts both ways: ``put`` derives the key
+    from the bytes, and ``get`` re-verifies ``checksum(data) == key`` so
+    a blob corrupted at rest raises ``ConflictError`` instead of
+    silently propagating garbage (and so a sharded store can rotate to a
+    healthy replica and read-repair the bad copy — see blobstore.py).
+    """
 
     scheme = "abstract"
 
@@ -50,12 +73,23 @@ class Storage:
     def get(self, url: str) -> bytes:
         raise NotImplementedError
 
+    def keys(self) -> list[str]:
+        """All stored content-address keys (for scrub/anti-entropy)."""
+        raise NotImplementedError
+
+    def quarantine(self, key: str) -> None:
+        """Move a corrupt blob aside: the key reads as missing afterwards
+        (so read-repair can rewrite it) but the bad bytes are kept for
+        forensics instead of destroyed."""
+        raise NotImplementedError
+
 
 class MemoryStorage(Storage):
     scheme = "mem"
 
     def __init__(self) -> None:
         self._blobs: dict[str, bytes] = {}
+        self._quarantined: dict[str, bytes] = {}
         self._lock = make_lock("storage")
 
     def put(self, data: bytes) -> str:
@@ -69,7 +103,20 @@ class MemoryStorage(Storage):
         with self._lock:
             if key not in self._blobs:
                 raise NotFoundError(f"blob {url} not found")
-            return self._blobs[key]
+            data = self._blobs[key]
+        if checksum(data) != key:
+            raise ConflictError(f"blob {url} failed its content-address check")
+        return data
+
+    def keys(self) -> list[str]:
+        with self._lock:
+            return sorted(self._blobs)
+
+    def quarantine(self, key: str) -> None:
+        with self._lock:
+            data = self._blobs.pop(key, None)
+            if data is not None:
+                self._quarantined[key] = data
 
 
 class LocalStorage(Storage):
@@ -85,10 +132,7 @@ class LocalStorage(Storage):
         key = checksum(data)
         path = os.path.join(self.root, key)
         if not os.path.exists(path):  # immutable: same content = same blob
-            tmp = path + f".tmp{secrets.token_hex(4)}"
-            with open(tmp, "wb") as f:
-                f.write(data)
-            os.replace(tmp, path)
+            _write_atomic(path, data)
         return f"local://{key}"
 
     def get(self, url: str) -> bytes:
@@ -97,7 +141,20 @@ class LocalStorage(Storage):
         if not os.path.exists(path):
             raise NotFoundError(f"blob {url} not found")
         with open(path, "rb") as f:
-            return f.read()
+            data = f.read()
+        if checksum(data) != key:
+            raise ConflictError(f"blob {url} failed its content-address check")
+        return data
+
+    def keys(self) -> list[str]:
+        # Blob files are bare hex keys; tmp files and quarantined copies
+        # carry a dotted suffix and never count as stored content.
+        return sorted(n for n in os.listdir(self.root) if "." not in n)
+
+    def quarantine(self, key: str) -> None:
+        path = os.path.join(self.root, key)
+        if os.path.exists(path):
+            os.replace(path, path + f".quarantined-{secrets.token_hex(4)}")
 
 
 # ---------------------------------------------------------------------------
@@ -149,8 +206,24 @@ class CFSExtension:
         name = f.get("name", "")
         if not name:
             raise ValidationError("file needs a name")
+        if name in (".", "..") or "/" in name or "\\" in name or os.sep in name:
+            raise ValidationError(
+                f"file name {name!r} must be a single path component"
+                " (no separators, no '.'/'..')"
+            )
         if not f.get("checksum"):
             raise ValidationError("file needs a checksum (immutability contract)")
+        # An entry without a resolvable storage reference is metadata
+        # pointing at nothing: accepting it makes every later
+        # download_bytes / sync_down / materialize_snapshot die with a
+        # bare KeyError — reject it at the RPC boundary instead.
+        storage = f.get("storage")
+        if not isinstance(storage, dict) or not storage.get("backend") or not storage.get("url"):
+            raise ValidationError(
+                "file needs a storage reference {'backend': ..., 'url': ...}"
+            )
+        if not isinstance(storage["backend"], str) or not isinstance(storage["url"], str):
+            raise ValidationError("storage backend and url must be strings")
         entry = {
             "fileid": secrets.token_hex(16),
             "colonyname": colony,
@@ -158,7 +231,7 @@ class CFSExtension:
             "name": name,
             "size": int(f.get("size", 0)),
             "checksum": f["checksum"],
-            "storage": dict(f.get("storage", {})),  # {"backend": scheme, "url": ...}
+            "storage": dict(storage),  # {"backend": scheme, "url": ...}
             "added": now_ns(),
             "addedby": identity,
         }
@@ -244,16 +317,82 @@ class CFSExtension:
 
 
 class CFSClient:
-    """Upload/download helper pairing the metadata plane with a Storage."""
+    """Upload/download helper pairing the metadata plane with a Storage.
 
-    def __init__(self, client, storage: Storage, prvkey: str) -> None:
+    ``retry=RetryPolicy(...)`` makes every blob put/get survive transient
+    storage failure (a sharded store with all of one key's replicas
+    momentarily unreachable, an injected ``blob.*`` fault) with the same
+    capped decorrelated-jitter backoff the RPC transports use. Only
+    transport-shaped errors are retried; a checksum mismatch is
+    deterministic and surfaces immediately.
+    """
+
+    def __init__(
+        self,
+        client,
+        storage: Storage,
+        prvkey: str,
+        retry: RetryPolicy | None = None,
+    ) -> None:
         self.client = client
         self.storage = storage
         self.prvkey = prvkey
+        self.retry = retry
+
+    # -- blob-plane retry ---------------------------------------------------
+    def _blob_retry(self, attempt: Callable[[], Any]) -> Any:
+        """Drive one storage operation under the retry policy.
+
+        Retries ``TransportError`` (a sharded store with zero reachable
+        replicas) and ``ConnectionError``/``OSError`` (a raw backend or
+        an injected fault); ``NotFoundError``/``ConflictError`` are
+        answers, not failures, and propagate immediately.
+        """
+        if self.retry is None:
+            return attempt()
+        deadline = time.monotonic() + self.retry.deadline_s
+        delays = self.retry.delays()
+        budget = max(1, self.retry.budget)
+        for i in range(budget):
+            try:
+                return attempt()
+            except (TransportError, ConnectionError, TimeoutError):
+                if i + 1 >= budget:
+                    raise
+                delay = delays.next_delay()
+                if time.monotonic() + delay >= deadline:
+                    raise
+            time.sleep(delay)
+        raise TransportError("blob retry budget exhausted")  # pragma: no cover
+
+    # -- path safety --------------------------------------------------------
+    @staticmethod
+    def _safe_dest(localdir: str, rel_label: str, name: str) -> str:
+        """Join server-supplied path pieces under ``localdir``, rejecting
+        anything that could escape it (``..``, separators inside the
+        name, absolute components). CFS labels/names are untrusted
+        metadata: a file named ``../evil`` must never materialize outside
+        the target directory."""
+        parts = [c for c in rel_label.split("/") if c]
+        parts.append(name)
+        for c in parts:
+            if (
+                not c
+                or c in (".", "..")
+                or "/" in c
+                or "\\" in c
+                or os.sep in c
+                or (os.altsep and os.altsep in c)
+            ):
+                raise ValidationError(
+                    f"unsafe path component {c!r} in CFS entry"
+                    f" (label {rel_label!r}, name {name!r})"
+                )
+        return os.path.join(localdir, *parts)
 
     # -- single files -------------------------------------------------------
     def upload_bytes(self, colony: str, label: str, name: str, data: bytes) -> dict:
-        url = self.storage.put(data)
+        url = self._blob_retry(lambda: self.storage.put(data))
         return self.client.add_file(
             {
                 "colonyname": colony,
@@ -268,9 +407,23 @@ class CFSClient:
 
     def download_bytes(self, colony: str, label: str, name: str) -> bytes:
         meta = self.client.get_file(colony, label, name, self.prvkey)
-        data = self.storage.get(meta["storage"]["url"])
+        data = self._fetch_blob(meta)
+        return data
+
+    def _fetch_blob(self, meta: dict) -> bytes:
+        """Fetch + verify one CFS entry's bytes (retry-backed)."""
+        storage_ref = meta.get("storage") or {}
+        url = storage_ref.get("url")
+        if not url:
+            raise ValidationError(
+                f"CFS entry {meta.get('label')!r}/{meta.get('name')!r}"
+                " carries no storage url"
+            )
+        data = self._blob_retry(lambda: self.storage.get(url))
         if checksum(data) != meta["checksum"]:
-            raise ConflictError(f"checksum mismatch for {label}/{name}")
+            raise ConflictError(
+                f"checksum mismatch for {meta.get('label')}/{meta.get('name')}"
+            )
         return data
 
     # -- directory sync -------------------------------------------------------
@@ -287,43 +440,45 @@ class CFSClient:
                     out.append(self.upload_bytes(colony, lbl, os.path.basename(rel), f.read()))
         return out
 
+    def _materialize_entry(self, meta: dict, base_label: str, localdir: str) -> str:
+        """Fetch one entry and write it crash-safely under localdir."""
+        rel_label = meta["label"][len(base_label):].lstrip("/")
+        dest = self._safe_dest(localdir, rel_label, meta["name"])
+        data = self._fetch_blob(meta)
+        os.makedirs(os.path.dirname(dest), exist_ok=True)
+        _write_atomic(dest, data)
+        return dest
+
     def sync_down(self, colony: str, label: str, localdir: str) -> list[str]:
         """Materialize the latest revision of every file under label."""
         os.makedirs(localdir, exist_ok=True)
-        written = []
-        for meta in self.client.get_files(colony, label, self.prvkey):
-            rel_label = meta["label"][len(self._norm(label)) :].lstrip("/")
-            dest_dir = os.path.join(localdir, rel_label) if rel_label else localdir
-            os.makedirs(dest_dir, exist_ok=True)
-            data = self.storage.get(meta["storage"]["url"])
-            if checksum(data) != meta["checksum"]:
-                raise ConflictError(f"checksum mismatch for {meta['name']}")
-            path = os.path.join(dest_dir, meta["name"])
-            with open(path, "wb") as f:
-                f.write(data)
-            written.append(path)
-        return written
+        base = self._norm(label)
+        return [
+            self._materialize_entry(meta, base, localdir)
+            for meta in self.client.get_files(colony, label, self.prvkey)
+        ]
 
     def materialize_snapshot(self, colony: str, snapshotid: str, localdir: str) -> list[str]:
         """Write a pinned snapshot's exact revisions into localdir."""
         snap = self.client.get_snapshot(colony, snapshotid, self.prvkey)
         os.makedirs(localdir, exist_ok=True)
-        written = []
-        for meta in snap["files"]:
-            data = self.storage.get(meta["storage"]["url"])
-            if checksum(data) != meta["checksum"]:
-                raise ConflictError(f"checksum mismatch for {meta['name']}")
-            rel_label = meta["label"][len(snap["label"]) :].lstrip("/")
-            dest_dir = os.path.join(localdir, rel_label) if rel_label else localdir
-            os.makedirs(dest_dir, exist_ok=True)
-            path = os.path.join(dest_dir, meta["name"])
-            with open(path, "wb") as f:
-                f.write(data)
-            written.append(path)
-        return written
+        return [
+            self._materialize_entry(meta, snap["label"], localdir)
+            for meta in snap["files"]
+        ]
 
     @staticmethod
     def _norm(label: str) -> str:
         if not label.startswith("/"):
             label = "/" + label
         return label.rstrip("/") or "/"
+
+
+# Re-exported lazily (PEP 562): blobstore imports Storage/checksum from
+# this module, so a module-level import here would be circular.
+def __getattr__(name: str):
+    if name == "ShardedStorage":
+        from .blobstore import ShardedStorage
+
+        return ShardedStorage
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -39,7 +39,7 @@ from ..analysis.authtrack import requires_auth
 from ..analysis.contracts import no_locks_held
 from ..analysis.locktrack import make_lock
 from ..runtime import faults
-from . import idempotency
+from . import blobstore, idempotency
 from .database import Database, MemoryDatabase
 from .errors import (
     AuthError,
@@ -692,6 +692,11 @@ class ColoniesServer:
             stats[state] = stats.get(state, 0) + n
         stats["executors"] = len(self.db.list_executors(colony))
         stats["failsafe_errors"] = self.failsafe_errors
+        # Blob-plane health (STORAGE.md): per-shard op/byte/repair
+        # counters aggregated over every live ShardedStorage in the
+        # process (broker + executors share one process in this repro,
+        # exactly like the InProc transport).
+        stats["blob"] = blobstore.aggregate_stats()
         return stats
 
     # -- failsafe (paper §3.4) --------------------------------------------------

@@ -29,6 +29,11 @@ Fault-point catalog (site → where it fires):
   (both backends): the write itself fails.
 * ``raft.tick``         — the HA event loop, once per tick: a raised
   fault skips the tick, a delay stalls it (forcing election churn).
+* ``blob.put`` / ``blob.get`` — the CFS blob plane, once per
+  child-shard operation inside ``ShardedStorage`` (ctx carries
+  ``shard`` and ``key``): a raised fault models a dead storage shard,
+  which puts tolerate (R−1 replicas may fail) and gets rotate past
+  (read-repair rewrites the copies observed broken; see STORAGE.md).
 
 Actions:
 
@@ -64,6 +69,8 @@ SITES = frozenset(
         "server.post_commit",
         "db.commit",
         "raft.tick",
+        "blob.put",
+        "blob.get",
     }
 )
 

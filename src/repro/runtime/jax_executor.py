@@ -14,6 +14,7 @@ crash loses at most ``checkpoint_every`` steps.
 
 from __future__ import annotations
 
+import os
 from typing import Any
 
 import jax
@@ -22,31 +23,83 @@ import numpy as np
 
 from ..configs import TrainConfig, get_config
 from ..core.client import Colonies
+from ..core.errors import ValidationError
 from ..core.executor import ExecutorBase, ProcessContext
 from ..core.fs import CFSClient, Storage
+from ..core.retry import RetryPolicy
 from ..data.pipeline import SyntheticTokens
 from ..train.checkpoint import CheckpointManager
 from ..train.train_step import init_state, make_eval_step, make_train_step
 from ..models import init_params, model_spec
 from .chaos import SimulatedCrash
 
+# Default blob-plane retry: generous enough to ride out one storage
+# shard dying mid-operation (ShardedStorage already tolerates R−1 shard
+# failures per call; this covers the window where ALL of a key's
+# replicas are briefly unreachable).
+BLOB_RETRY = RetryPolicy(base_s=0.01, cap_s=0.25, deadline_s=10.0, budget=6)
+
 
 class JaxExecutorBase(ExecutorBase):
-    """ExecutorBase + CFS access + crash simulation support."""
+    """ExecutorBase + CFS access + crash simulation support.
+
+    Implements the paper's fs sync directives (§3.4.5, Listing 2): before
+    a handler runs, every ``fs.snapshots`` entry is materialized and
+    every ``fs.dirs`` entry synced down into the process workdir; after
+    it succeeds, ``fs.dirs`` entries with ``upload`` sync back up. All
+    blob traffic is retry-backed (see BLOB_RETRY / CFSClient).
+    """
 
     def __init__(self, client: Colonies, colonyname: str, executorname: str,
                  executortype: str, storage: Storage, colony_prvkey: str | None = None,
-                 **kw: Any) -> None:
+                 blob_retry: RetryPolicy | None = BLOB_RETRY, **kw: Any) -> None:
         super().__init__(client, colonyname, executorname, executortype,
                          colony_prvkey=colony_prvkey, **kw)
         self.storage = storage
-        self.cfs = CFSClient(client, storage, self.prvkey)
+        self.cfs = CFSClient(client, storage, self.prvkey, retry=blob_retry)
 
     def _execute(self, process) -> None:  # crash passthrough for chaos tests
         try:
             super()._execute(process)
         except SimulatedCrash:
             self.failed += 1  # vanish without closing — failsafe must recover
+
+    # ------------------------------------------------- fs sync directives
+    def _mount_dir(self, ctx: ProcessContext, directive_dir: str) -> str:
+        """Resolve a directive's ``dir`` inside the process workdir.
+
+        ``dir`` is relative to ``fs.mount`` (absolute paths are
+        re-anchored by stripping the mount prefix); the result must stay
+        inside the workdir — directives are part of the untrusted spec.
+        """
+        fs = ctx.process.spec.fs
+        d = directive_dir or ""
+        if fs.mount and d.startswith(fs.mount):
+            d = d[len(fs.mount):]
+        d = d.lstrip("/")
+        base = ctx.workdir or "."
+        for comp in d.split("/"):
+            if comp in (".", "..") or "\\" in comp:
+                raise ValidationError(f"unsafe fs directive dir {directive_dir!r}")
+        dest = os.path.join(base, d) if d else base
+        os.makedirs(dest, exist_ok=True)
+        return dest
+
+    def _sync_before(self, ctx: ProcessContext) -> None:
+        fs = ctx.process.spec.fs
+        for snap in fs.snapshots:
+            self.cfs.materialize_snapshot(
+                self.colonyname, snap.snapshotid, self._mount_dir(ctx, snap.dir)
+            )
+        for d in fs.dirs:
+            self.cfs.sync_down(self.colonyname, d.label, self._mount_dir(ctx, d.dir))
+
+    def _sync_after(self, ctx: ProcessContext) -> None:
+        for d in ctx.process.spec.fs.dirs:
+            if d.upload:
+                self.cfs.sync_up(
+                    self.colonyname, d.label, self._mount_dir(ctx, d.dir)
+                )
 
 
 def _smoke_cfg(kwargs: dict):

@@ -1,0 +1,438 @@
+"""Sharded, self-healing blob plane (STORAGE.md).
+
+Covers the ShardedStorage contract (placement determinism, R-way puts
+tolerating R−1 shard failures, get rotation, read-repair + quarantine,
+scrub), the blob.* fault sites, the CFSClient retry integration, the
+colonystats surfacing, and the executor fs sync directives end-to-end.
+"""
+
+import pytest
+
+from repro.core import Colonies, InProcTransport, RetryPolicy
+from repro.core.blobstore import VNODES, ShardedStorage, aggregate_stats
+from repro.core.errors import (
+    ConflictError,
+    NotFoundError,
+    TransportError,
+    ValidationError,
+)
+from repro.core.fs import CFSClient, LocalStorage, MemoryStorage, checksum
+from repro.runtime import faults
+from repro.runtime.faults import FaultPlan, FaultRule
+
+FAST_RETRY = RetryPolicy(base_s=0.001, cap_s=0.01, deadline_s=5.0, budget=8, seed=7)
+
+
+def make_store(n=3, replicas=2):
+    shards = [MemoryStorage() for _ in range(n)]
+    return ShardedStorage(shards, replicas=replicas), shards
+
+
+def dead_shard(idx):
+    """A plan that makes shard ``idx`` unreachable for every blob op."""
+    return FaultPlan(
+        [
+            FaultRule("blob.put", "crash", match={"shard": idx}, times=None),
+            FaultRule("blob.get", "crash", match={"shard": idx}, times=None),
+        ]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Placement (consistent-hash ring)
+# ---------------------------------------------------------------------------
+
+
+class TestPlacement:
+    def test_replicas_are_distinct_and_deterministic(self):
+        store, _ = make_store(5, replicas=3)
+        for i in range(50):
+            key = checksum(str(i).encode())
+            reps = store.replicas_for(key)
+            assert len(reps) == 3 and len(set(reps)) == 3
+            assert reps == store.replicas_for(key)  # stable
+
+    def test_identical_rings_across_instances(self):
+        """Same shard count ⇒ same ring ⇒ same placement (no RNG, no clock)."""
+        a, _ = make_store(4, replicas=2)
+        b, _ = make_store(4, replicas=2)
+        for i in range(20):
+            key = checksum(str(i).encode())
+            assert a.replicas_for(key) == b.replicas_for(key)
+
+    def test_vnodes_spread_keys_across_all_shards(self):
+        store, _ = make_store(3, replicas=1)
+        owners = {store.replicas_for(checksum(str(i).encode()))[0] for i in range(200)}
+        assert owners == {0, 1, 2}
+
+    def test_replication_capped_at_shard_count(self):
+        store, _ = make_store(2, replicas=5)
+        assert store.replicas == 2
+
+    def test_rejects_degenerate_configs(self):
+        with pytest.raises(ValueError):
+            ShardedStorage([], replicas=1)
+        with pytest.raises(ValueError):
+            ShardedStorage([MemoryStorage()], replicas=0)
+
+
+# ---------------------------------------------------------------------------
+# Put/get semantics
+# ---------------------------------------------------------------------------
+
+
+class TestPutGet:
+    def test_put_writes_all_replicas(self):
+        store, shards = make_store(3, replicas=2)
+        url = store.put(b"hello")
+        key = checksum(b"hello")
+        assert url == f"shard://{key}"
+        holders = [i for i, s in enumerate(shards) if key in s._blobs]
+        assert sorted(holders) == sorted(store.replicas_for(key))
+        assert store.get(url) == b"hello"
+        assert store.replica_count(key) == 2
+
+    def test_put_tolerates_r_minus_1_failures(self):
+        store, shards = make_store(3, replicas=2)
+        data = b"survives one dead shard"
+        key = checksum(data)
+        dead = store.replicas_for(key)[0]
+        with faults.active(dead_shard(dead)):
+            url = store.put(data)
+        assert key not in shards[dead]._blobs  # the dead replica missed it
+        assert store.get(url) == data
+        assert store.stats()["put_failures"] == 1
+
+    def test_put_with_zero_replicas_raises_transport_error(self):
+        store, _ = make_store(3, replicas=2)
+        plan = FaultPlan([FaultRule("blob.put", "crash", times=None)])
+        with faults.active(plan), pytest.raises(TransportError):
+            store.put(b"nowhere to land")
+        assert store.stats()["put_failures"] == 2  # both replicas tried
+
+    def test_get_rotates_past_missing_replica(self):
+        store, shards = make_store(3, replicas=2)
+        data = b"rotate me"
+        key = checksum(data)
+        url = store.put(data)
+        first = store.replicas_for(key)[0]
+        del shards[first]._blobs[key]
+        assert store.get(url) == data
+        assert store.stats()["missing"] == 1
+
+    def test_get_rotates_past_unreachable_replica(self):
+        store, _ = make_store(3, replicas=2)
+        data = b"shard down"
+        key = checksum(data)
+        url = store.put(data)
+        with faults.active(dead_shard(store.replicas_for(key)[0])):
+            assert store.get(url) == data
+        assert store.stats()["get_failures"] == 1
+
+    def test_get_missing_everywhere_is_not_found(self):
+        store, _ = make_store(3, replicas=2)
+        with pytest.raises(NotFoundError):
+            store.get("shard://" + "0" * 64)
+
+    def test_get_all_replicas_unreachable_is_transport_error(self):
+        """Transient absence must NOT read as NotFound — the caller's
+        retry policy retries TransportError but trusts NotFoundError."""
+        store, _ = make_store(3, replicas=2)
+        url = store.put(b"temporarily dark")
+        plan = FaultPlan([FaultRule("blob.get", "crash", times=None)])
+        with faults.active(plan), pytest.raises(TransportError):
+            store.get(url)
+        assert store.get(url) == b"temporarily dark"  # back after the outage
+
+
+# ---------------------------------------------------------------------------
+# Read-repair, quarantine, scrub
+# ---------------------------------------------------------------------------
+
+
+class TestSelfHealing:
+    def test_read_repair_rewrites_missing_replica(self):
+        store, shards = make_store(3, replicas=2)
+        data = b"heal me"
+        key = checksum(data)
+        url = store.put(data)
+        first = store.replicas_for(key)[0]
+        del shards[first]._blobs[key]
+        assert store.replica_count(key) == 1
+        store.get(url)  # observes the hole, repairs it
+        assert store.replica_count(key) == 2
+        assert key in shards[first]._blobs
+        st = store.stats()
+        assert st["repairs"] == 1 and st["per_shard"][first]["repairs"] == 1
+
+    def test_read_repair_quarantines_corrupt_replica(self):
+        store, shards = make_store(3, replicas=2)
+        data = b"bitrot victim"
+        key = checksum(data)
+        url = store.put(data)
+        first = store.replicas_for(key)[0]
+        shards[first]._blobs[key] = b"bitrot"  # corrupt at rest
+        assert store.get(url) == data  # healthy copy wins
+        # the bad bytes were moved aside, not destroyed, then repaired
+        assert shards[first]._quarantined[key] == b"bitrot"
+        assert shards[first]._blobs[key] == data
+        st = store.stats()
+        assert st["corrupt"] == 1 and st["quarantined"] == 1 and st["repairs"] == 1
+        assert store.quarantine_log == [(first, key)]
+
+    def test_repair_failure_is_counted_not_fatal(self):
+        store, shards = make_store(3, replicas=2)
+        data = b"repair blocked"
+        key = checksum(data)
+        url = store.put(data)
+        first, second = store.replicas_for(key)
+        del shards[first]._blobs[key]
+        # the broken replica's shard accepts gets but refuses the repair put
+        plan = FaultPlan([FaultRule("blob.put", "crash", match={"shard": first}, times=None)])
+        with faults.active(plan):
+            assert store.get(url) == data
+        st = store.stats()
+        assert st["repair_failures"] == 1 and st["repairs"] == 0
+        assert store.replica_count(key) == 1  # still degraded, still serving
+
+    def test_scrub_restores_replication_after_shard_outage(self):
+        """The revived-shard path: writes land while one shard is dark,
+        scrub backfills every under-replicated key."""
+        store, _ = make_store(3, replicas=2)
+        urls = {}
+        with faults.active(dead_shard(1)):
+            for i in range(12):
+                data = f"blob-{i}".encode()
+                urls[store.put(data)] = data
+        degraded = [u for u in urls if store.replica_count(u.split("://")[1]) < 2]
+        assert degraded  # shard 1 is first-or-second replica for some keys
+        report = store.scrub()  # shard 1 is back (plan uninstalled)
+        assert report["lost"] == 0 and report["repaired"] == len(degraded)
+        for url, data in urls.items():
+            assert store.replica_count(url.split("://")[1]) == 2
+            assert store.get(url) == data
+
+    def test_scrub_counts_lost_keys(self):
+        """Every replica corrupt ⇒ the key is listed but unhealable."""
+        store, shards = make_store(3, replicas=2)
+        key = checksum(b"doomed")
+        store.put(b"doomed")
+        for s in shards:
+            if key in s._blobs:
+                s._blobs[key] = b"rot"
+        assert store.scrub()["lost"] == 1
+
+    def test_keys_is_union_of_reachable_shards(self):
+        store, _ = make_store(3, replicas=1)
+        keys = {store.put(f"k{i}".encode()).split("://")[1] for i in range(9)}
+        assert set(store.keys()) == keys
+
+
+# ---------------------------------------------------------------------------
+# Local-backend parity
+# ---------------------------------------------------------------------------
+
+
+class TestLocalShards:
+    def test_roundtrip_and_repair_over_local_storage(self, tmp_path):
+        shards = [LocalStorage(str(tmp_path / f"s{i}")) for i in range(3)]
+        store = ShardedStorage(shards, replicas=2)
+        data = b"bytes on disk"
+        key = checksum(data)
+        url = store.put(data)
+        first = store.replicas_for(key)[0]
+        # corrupt the on-disk copy behind the store's back
+        (tmp_path / f"s{first}" / key).write_bytes(b"garbage")
+        assert store.get(url) == data
+        assert store.replica_count(key) == 2  # repaired in place
+        # the quarantined copy survives with a dotted suffix (≠ a key)
+        q = [p for p in (tmp_path / f"s{first}").iterdir() if ".quarantined-" in p.name]
+        assert len(q) == 1 and q[0].read_bytes() == b"garbage"
+        assert key in shards[first].keys() and q[0].name not in shards[first].keys()
+
+
+# ---------------------------------------------------------------------------
+# CFSClient retry integration
+# ---------------------------------------------------------------------------
+
+
+class TestCFSClientRetry:
+    def test_upload_retries_through_total_outage(self, colony):
+        store, _ = make_store(3, replicas=2)
+        cfs = CFSClient(colony["client"], store, colony["colony_prv"], retry=FAST_RETRY)
+        # every replica unreachable for the first 2 shard-puts: attempt 1
+        # reaches zero replicas (TransportError), the retry succeeds.
+        plan = FaultPlan([FaultRule("blob.put", "crash", times=2)])
+        with faults.active(plan):
+            meta = cfs.upload_bytes("dev", "/retry", "a.bin", b"eventually")
+        assert plan.fired("blob.put") == 2
+        assert cfs.download_bytes("dev", "/retry", "a.bin") == b"eventually"
+        assert meta["storage"]["backend"] == "shard"
+
+    def test_download_retries_through_total_outage(self, colony):
+        store, _ = make_store(3, replicas=2)
+        cfs = CFSClient(colony["client"], store, colony["colony_prv"], retry=FAST_RETRY)
+        cfs.upload_bytes("dev", "/retry2", "b.bin", b"come back")
+        plan = FaultPlan([FaultRule("blob.get", "crash", times=2)])
+        with faults.active(plan):
+            assert cfs.download_bytes("dev", "/retry2", "b.bin") == b"come back"
+        assert plan.fired("blob.get") == 2
+
+    def test_retry_budget_exhaustion_surfaces_transport_error(self, colony):
+        store, _ = make_store(3, replicas=2)
+        tight = RetryPolicy(base_s=0.001, cap_s=0.002, deadline_s=5.0, budget=2, seed=1)
+        cfs = CFSClient(colony["client"], store, colony["colony_prv"], retry=tight)
+        plan = FaultPlan([FaultRule("blob.put", "crash", times=None)])
+        with faults.active(plan), pytest.raises(TransportError):
+            cfs.upload_bytes("dev", "/retry3", "c.bin", b"never lands")
+
+    def test_not_found_is_not_retried(self, colony):
+        store, _ = make_store(3, replicas=2)
+        cfs = CFSClient(colony["client"], store, colony["colony_prv"], retry=FAST_RETRY)
+        meta = cfs.upload_bytes("dev", "/retry4", "d.bin", b"then gone")
+        for s in store.shards:
+            s._blobs.clear()
+        before = store.stats()["gets"]
+        with pytest.raises(NotFoundError):
+            cfs.download_bytes("dev", "/retry4", "d.bin")
+        # one rotation over the replicas, no retry rounds on a hard miss
+        assert store.stats()["gets"] == before
+
+
+# ---------------------------------------------------------------------------
+# colonystats surfacing
+# ---------------------------------------------------------------------------
+
+
+class TestStatsSurfacing:
+    def test_aggregate_stats_sums_live_stores(self):
+        a, _ = make_store(3, replicas=2)
+        b, _ = make_store(2, replicas=2)
+        base = aggregate_stats()
+        a.put(b"one")
+        b.put(b"two")
+        agg = aggregate_stats()
+        assert agg["puts"] - base["puts"] == 4  # 2 replicas × 2 stores
+        assert agg["stores"] >= 2
+
+    def test_blob_counters_reach_colonystats_rpc(self, colony):
+        store, _ = make_store(3, replicas=2)
+        cfs = CFSClient(colony["client"], store, colony["colony_prv"], retry=FAST_RETRY)
+        before = colony["client"].stats("dev", colony["colony_prv"])["blob"]
+        cfs.upload_bytes("dev", "/statsblob", "s.bin", b"counted")
+        after = colony["client"].stats("dev", colony["colony_prv"])["blob"]
+        assert after["puts"] - before["puts"] == 2
+        assert after["put_bytes"] - before["put_bytes"] == 2 * len(b"counted")
+
+
+# ---------------------------------------------------------------------------
+# Executor fs sync directives (end-to-end)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def sharded_cfs(colony):
+    store, shards = make_store(3, replicas=2)
+    cfs = CFSClient(colony["client"], store, colony["colony_prv"], retry=FAST_RETRY)
+    return cfs, store, shards
+
+
+class TestExecutorSyncDirectives:
+    def _executor(self, colony, store, tmp_path, handler):
+        from repro.runtime.jax_executor import JaxExecutorBase
+
+        ex = JaxExecutorBase(
+            Colonies(InProcTransport([colony["server"]], retry=FAST_RETRY)),
+            "dev",
+            "fs-worker",
+            "fsw",
+            storage=store,
+            colony_prvkey=colony["colony_prv"],
+            blob_retry=FAST_RETRY,
+            workdir_root=str(tmp_path / "work"),
+        )
+        ex.register_function("consume", handler)
+        return ex
+
+    def _spec(self, fs):
+        return {
+            "conditions": {"colonyname": "dev", "executortype": "fsw"},
+            "funcname": "consume",
+            "maxexectime": 30,
+            "fs": fs,
+        }
+
+    def test_snapshot_and_dirs_sync_roundtrip(self, colony, sharded_cfs, tmp_path):
+        cfs, store, _ = sharded_cfs
+        client = colony["client"]
+        cfs.upload_bytes("dev", "/in", "data.txt", b"pinned input")
+        snap = client.create_snapshot("dev", "/in", "s1", colony["colony_prv"])
+        cfs.upload_bytes("dev", "/in", "data.txt", b"LATER revision")  # must not leak in
+
+        def consume(ctx):
+            import os as _os
+
+            src = _os.path.join(ctx.workdir, "in", "data.txt")
+            with open(src, "rb") as f:
+                data = f.read()
+            out = _os.path.join(ctx.workdir, "out")
+            _os.makedirs(out, exist_ok=True)
+            with open(_os.path.join(out, "result.txt"), "wb") as f:
+                f.write(data.upper())
+            return [len(data)]
+
+        ex = self._executor(colony, store, tmp_path, consume)
+        fs = {
+            "mount": "/cfs",
+            "snapshots": [{"snapshotid": snap["snapshotid"], "label": "/in", "dir": "/cfs/in"}],
+            "dirs": [{"label": "/out", "dir": "/cfs/out", "upload": True}],
+        }
+        p = client.submit(self._spec(fs), colony["colony_prv"])
+        assert ex.step(timeout=2.0)
+        done = client.get_process(p["processid"], colony["colony_prv"])
+        assert done["state"] == "successful", done.get("errors")
+        assert done["out"] == [len(b"pinned input")]
+        # the upload directive published the handler's output as CFS files
+        assert cfs.download_bytes("dev", "/out", "result.txt") == b"PINNED INPUT"
+
+    def test_sync_survives_one_dead_shard(self, colony, sharded_cfs, tmp_path):
+        """The ISSUE gate: executor sync must ride out transient shard
+        loss via the CFSClient retry policy + replica rotation."""
+        cfs, store, _ = sharded_cfs
+        client = colony["client"]
+        cfs.upload_bytes("dev", "/in2", "a.bin", b"alpha")
+        cfs.upload_bytes("dev", "/in2", "b.bin", b"beta")
+        seen = {}
+
+        def consume(ctx):
+            import os as _os
+
+            d = _os.path.join(ctx.workdir, "in2")
+            for fn in sorted(_os.listdir(d)):
+                with open(_os.path.join(d, fn), "rb") as f:
+                    seen[fn] = f.read()
+            return [sorted(seen)]
+
+        ex = self._executor(colony, store, tmp_path, consume)
+        fs = {"mount": "/cfs", "dirs": [{"label": "/in2", "dir": "/cfs/in2", "upload": False}]}
+        p = client.submit(self._spec(fs), colony["colony_prv"])
+        with faults.active(dead_shard(0)):
+            assert ex.step(timeout=2.0)
+        done = client.get_process(p["processid"], colony["colony_prv"])
+        assert done["state"] == "successful", done.get("errors")
+        assert seen == {"a.bin": b"alpha", "b.bin": b"beta"}
+
+    def test_malicious_directive_dir_fails_the_process(self, colony, sharded_cfs, tmp_path):
+        cfs, store, _ = sharded_cfs
+        client = colony["client"]
+        cfs.upload_bytes("dev", "/in3", "x.bin", b"x")
+        ex = self._executor(colony, store, tmp_path, lambda ctx: [])
+        fs = {"mount": "/cfs", "dirs": [{"label": "/in3", "dir": "/cfs/../../etc", "upload": False}]}
+        p = client.submit(self._spec(fs), colony["colony_prv"])
+        assert ex.step(timeout=2.0)
+        done = client.get_process(p["processid"], colony["colony_prv"])
+        assert done["state"] == "failed"
+        assert any("unsafe fs directive" in e for e in done["errors"])
+        # nothing escaped the sandbox root
+        escaped = tmp_path.parent / "etc"
+        assert not escaped.exists()

@@ -236,3 +236,78 @@ def test_chaos_soak_every_process_terminal_exactly_once(ha):
     # The brokers' failsafe loops never crashed silently.
     stats = client.stats("dev", colony_prv)
     assert stats["failsafe_errors"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Blob-plane chaos: one storage shard dies mid-soak (STORAGE.md gate)
+# ---------------------------------------------------------------------------
+
+
+def test_blob_soak_shard_death_snapshots_stay_byte_identical(colony, tmp_path):
+    """Kill one of three blob shards mid-soak with a seeded FaultPlan:
+    every snapshot taken before, during, and after the outage must still
+    materialize byte-identical, and a scrub after the revive must
+    restore full replication (verified through the repair counters)."""
+    from repro.core.blobstore import ShardedStorage
+    from repro.core.fs import CFSClient, MemoryStorage
+
+    client, colony_prv = colony["client"], colony["colony_prv"]
+    store = ShardedStorage([MemoryStorage() for _ in range(3)], replicas=2)
+    cfs = CFSClient(
+        client, store, colony_prv,
+        retry=RetryPolicy(base_s=0.001, cap_s=0.01, deadline_s=5.0, budget=16, seed=11),
+    )
+
+    expected: dict[str, bytes] = {}  # name -> bytes at snapshot time
+    snapshots: list[tuple[str, dict[str, bytes]]] = []
+
+    def upload_round(round_no, n=6):
+        for i in range(n):
+            data = f"round-{round_no} blob-{i} ".encode() * (i + 1)
+            name = f"r{round_no}-{i}.bin"
+            cfs.upload_bytes("dev", "/soakblob", name, data)
+            expected[name] = data
+        snap = client.create_snapshot("dev", "/soakblob", f"s{round_no}", colony_prv)
+        snapshots.append((snap["snapshotid"], dict(expected)))
+
+    def check_all_snapshots(tag):
+        for j, (sid, files) in enumerate(snapshots):
+            out = tmp_path / tag / f"snap{j}"
+            cfs.materialize_snapshot("dev", sid, str(out))
+            got = {p.name: p.read_bytes() for p in out.iterdir()}
+            assert got == files, f"snapshot {j} diverged ({tag})"
+
+    upload_round(0)
+
+    # Shard 1 dies: every put/get against it fails, plus a seeded 10%
+    # transient flake on shard 2's gets — some keys briefly lose BOTH
+    # replicas and only the CFSClient retry rides it out.
+    plan = faults.FaultPlan(
+        [
+            faults.FaultRule("blob.put", "crash", match={"shard": 1}, times=None),
+            faults.FaultRule("blob.get", "crash", match={"shard": 1}, times=None),
+            faults.FaultRule(
+                "blob.get", "crash", match={"shard": 2}, times=None, prob=0.1
+            ),
+        ],
+        seed=77,
+    )
+    with faults.active(plan):
+        upload_round(1)
+        upload_round(2)
+        check_all_snapshots("during")
+    assert plan.fired() >= 5, f"blob chaos barely fired ({plan.fired()})"
+
+    # Shard 1 is back. The outage left under-replicated keys behind;
+    # scrub is the anti-entropy pass that heals them all.
+    degraded = [k for k in store.keys() if store.replica_count(k) < 2]
+    assert degraded, "the outage should have left under-replicated keys"
+    report = store.scrub()
+    assert report["lost"] == 0
+    assert report["repaired"] >= len(degraded) > 0
+    assert all(store.replica_count(k) == 2 for k in store.keys())
+    st = store.stats()
+    assert st["repairs"] >= report["repaired"]
+    assert st["put_failures"] > 0 and st["per_shard"][1]["puts"] > 0
+
+    check_all_snapshots("after")

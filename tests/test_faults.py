@@ -39,9 +39,9 @@ SPEC = {"funcname": "echo", "conditions": {"colonyname": "dev", "executortype": 
 FAST_RETRY = RetryPolicy(base_s=0.001, cap_s=0.01, deadline_s=5.0, budget=8, seed=7)
 
 
-def _rig(db):
+def _rig(db, server_prv=None):
     """Standalone server + signed client/executor keys on the given db."""
-    server_prv = Crypto.prvkey()
+    server_prv = server_prv or Crypto.prvkey()
     colony_prv = Crypto.prvkey()
     exec_prv = Crypto.prvkey()
     srv = standalone_server(Crypto.id(server_prv), db)
@@ -490,3 +490,37 @@ class TestFailsafeErrorCounter:
             time.sleep(0.02)
         stats = client.stats("dev", prvkey)
         assert stats["failsafe_errors"] >= 2  # loop survived and counted
+
+
+# ---------------------------------------------------------------------------
+# Satellite: dedup durability across a broker restart (sqlite backend)
+# ---------------------------------------------------------------------------
+
+
+class TestDedupRestartDurability:
+    def test_sqlite_dedup_survives_restart(self, tmp_path):
+        """The rpc_dedup row is committed with the op, so a keyed msgid
+        replayed against a RESTARTED broker (fresh process, same
+        database file) must return the recorded reply — the classic
+        crash-after-commit-before-reply window crossed with a reboot."""
+        path = str(tmp_path / "colonies.db")
+        server_prv = Crypto.prvkey()
+        srv, client, exec_prv = _rig(SqliteDatabase(path), server_prv=server_prv)
+        env = sign_envelope(
+            "submitfunctionspec", {"spec": SPEC}, exec_prv, msgid=new_id()
+        )
+        r1 = srv.handle(env)
+        assert "result" in r1 and r1.get("replayed") is None
+        srv.stop()
+
+        # Reboot: same identity, same database file, empty in-memory state.
+        srv2 = standalone_server(Crypto.id(server_prv), SqliteDatabase(path))
+        try:
+            r2 = srv2.handle(env)  # byte-identical replay of the envelope
+            assert r2.get("replayed") is True
+            assert r2["result"]["processid"] == r1["result"]["processid"]
+            client2 = Colonies(InProcTransport([srv2]))
+            procs = client2.get_processes("dev", exec_prv)
+            assert [p["processid"] for p in procs] == [r1["result"]["processid"]]
+        finally:
+            srv2.stop()

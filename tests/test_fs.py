@@ -154,3 +154,183 @@ def test_get_snapshots_lists_whole_colony(colony, cfs):
     client.remove_snapshot("dev", s1["snapshotid"], colony["colony_prv"])
     left = [s["snapshotid"] for s in client.get_snapshots("dev", colony["colony_prv"])]
     assert s1["snapshotid"] not in left and s2["snapshotid"] in left
+
+
+# ---------------------------------------------------------------------------
+# Bugfix sweep regressions (see CHANGES.md: blob-plane PR)
+# ---------------------------------------------------------------------------
+
+
+def test_add_file_requires_storage_reference(colony):
+    """Seed bug: addfile accepted entries with no/empty storage dict, so
+    every later download died with a bare KeyError instead of failing at
+    the RPC boundary."""
+    from repro.core.errors import ValidationError
+
+    client = colony["client"]
+    base = {
+        "colonyname": "dev",
+        "label": "/val",
+        "name": "f.bin",
+        "size": 1,
+        "checksum": checksum(b"x"),
+    }
+    for bad in (
+        {},  # storage key absent
+        {"storage": None},
+        {"storage": {}},
+        {"storage": {"backend": "mem"}},  # url missing
+        {"storage": {"url": "mem://abc"}},  # backend missing
+        {"storage": {"backend": "", "url": "mem://abc"}},
+        {"storage": {"backend": "mem", "url": ""}},
+        {"storage": {"backend": 7, "url": "mem://abc"}},
+    ):
+        with pytest.raises(ValidationError):
+            client.add_file({**base, **bad}, colony["colony_prv"])
+    # the well-formed entry still lands
+    ok = client.add_file(
+        {**base, "storage": {"backend": "mem", "url": "mem://abc"}},
+        colony["colony_prv"],
+    )
+    assert ok["revision"] == 1
+
+
+def test_add_file_rejects_separator_names(colony, cfs):
+    from repro.core.errors import ValidationError
+
+    for name in ("..", ".", "a/b", "..\\evil"):
+        with pytest.raises(ValidationError):
+            cfs.upload_bytes("dev", "/names", name, b"x")
+
+
+def test_sync_down_rejects_path_traversal(colony, cfs, tmp_path):
+    """Seed bug: sync_down joined server-supplied names straight into
+    localdir, so a row named ``../../escape`` (injected below the RPC
+    validation, e.g. by a compromised replica) wrote outside the target
+    directory."""
+    from repro.core.errors import ValidationError
+
+    evil = {
+        "fileid": "f" * 32,
+        "colonyname": "dev",
+        "label": "/trav",
+        "name": "../../escape.txt",
+        "size": 4,
+        "checksum": checksum(b"evil"),
+        "storage": {"backend": "mem", "url": cfs.storage.put(b"evil")},
+        "added": 1,
+        "addedby": "test",
+    }
+    colony["server"].db.cfs_add_file(evil)
+    dst = tmp_path / "jail" / "down"
+    with pytest.raises(ValidationError):
+        cfs.sync_down("dev", "/trav", str(dst))
+    assert not (tmp_path / "escape.txt").exists()
+    assert not (tmp_path / "jail" / "escape.txt").exists()
+
+
+def test_materialize_snapshot_rejects_traversal_label(colony, cfs, tmp_path):
+    from repro.core.errors import ValidationError
+
+    cfs.upload_bytes("dev", "/trav2", "ok.txt", b"fine")
+    snap = colony["client"].create_snapshot("dev", "/trav2", "s", colony["colony_prv"])
+    evil = {
+        "fileid": "e" * 32,
+        "colonyname": "dev",
+        "label": "/trav2/../..",  # traversal smuggled in the label
+        "name": "pwn.txt",
+        "size": 4,
+        "checksum": checksum(b"evil"),
+        "storage": {"backend": "mem", "url": cfs.storage.put(b"evil")},
+        "added": 1,
+        "addedby": "test",
+    }
+    colony["server"].db.cfs_add_file(evil)
+    snap2 = colony["client"].create_snapshot("dev", "/trav2", "s2", colony["colony_prv"])
+    out = tmp_path / "snapjail"
+    # the pre-existing clean snapshot still materializes
+    cfs.materialize_snapshot("dev", snap["snapshotid"], str(out))
+    assert (out / "ok.txt").read_bytes() == b"fine"
+    with pytest.raises(ValidationError):
+        cfs.materialize_snapshot("dev", snap2["snapshotid"], str(out))
+    assert not (tmp_path / "pwn.txt").exists()
+
+
+def test_sync_down_crash_leaves_no_torn_file(colony, cfs, tmp_path, monkeypatch):
+    """Seed bug: destinations were written in place, so a crash mid-write
+    left a torn file under the final name — and a re-run saw it as
+    already synced. Atomic tmp+replace must leave nothing behind."""
+    import builtins
+
+    cfs.upload_bytes("dev", "/atomic", "f.bin", b"A" * 4096)
+    dst = tmp_path / "down"
+    real_open = builtins.open
+
+    def torn_open(path, mode="r", *a, **kw):
+        if "w" in str(mode) and "b" in str(mode) and str(path).startswith(str(dst)):
+            f = real_open(path, mode, *a, **kw)
+
+            class Torn:
+                def __enter__(self):
+                    return self
+
+                def __exit__(self, *exc):
+                    f.close()
+                    return False
+
+                def write(self, data):
+                    f.write(data[: len(data) // 2])
+                    f.flush()
+                    raise OSError("disk died mid-write")
+
+            return Torn()
+        return real_open(path, mode, *a, **kw)
+
+    monkeypatch.setattr(builtins, "open", torn_open)
+    with pytest.raises(OSError):
+        cfs.sync_down("dev", "/atomic", str(dst))
+    monkeypatch.undo()
+    # no torn file under the final name, no tmp litter
+    assert not (dst / "f.bin").exists()
+    assert [p.name for p in dst.iterdir()] == []
+    # a clean re-run converges
+    cfs.sync_down("dev", "/atomic", str(dst))
+    assert (dst / "f.bin").read_bytes() == b"A" * 4096
+
+
+def test_storage_get_verifies_content_address(tmp_path):
+    """Seed bug: backends returned whatever bytes sat under the key, so
+    corruption at rest propagated silently; the content-address contract
+    now raises ConflictError at the storage layer itself."""
+    mem = MemoryStorage()
+    url = mem.put(b"good")
+    key = url.split("://")[1]
+    mem._blobs[key] = b"bad"
+    with pytest.raises(ConflictError):
+        mem.get(url)
+
+    loc = LocalStorage(str(tmp_path / "blobs"))
+    url = loc.put(b"good")
+    key = url.split("://")[1]
+    (tmp_path / "blobs" / key).write_bytes(b"bad")
+    with pytest.raises(ConflictError):
+        loc.get(url)
+
+
+def test_storage_quarantine_frees_key_keeps_bytes(tmp_path):
+    mem = MemoryStorage()
+    key = mem.put(b"suspect").split("://")[1]
+    mem.quarantine(key)
+    with pytest.raises(NotFoundError):
+        mem.get(f"mem://{key}")
+    assert mem._quarantined[key] == b"suspect"
+    # re-put after quarantine works (slot freed)
+    assert mem.put(b"suspect").endswith(key)
+
+    loc = LocalStorage(str(tmp_path / "q"))
+    key = loc.put(b"suspect").split("://")[1]
+    loc.quarantine(key)
+    with pytest.raises(NotFoundError):
+        loc.get(f"local://{key}")
+    assert loc.put(b"suspect").endswith(key)
+    assert loc.get(f"local://{key}") == b"suspect"
